@@ -1,0 +1,103 @@
+"""End-to-end driver: train a ~100M-param LM with the production DIANA-RR
+compressed-gradient wire on a (data=4, model=2) mesh of 8 host devices.
+
+This is deliverable (b)'s end-to-end example: real mesh, real shard_map
+train step (per-client grads -> Rand-block compression -> sparse all-reduce
+-> DIANA shift update -> SGD), random-reshuffling data pipeline, loss
+falling on a learnable synthetic token stream.
+
+    PYTHONPATH=src python examples/train_lm_diana_rr.py --preset tiny --steps 60
+    PYTHONPATH=src python examples/train_lm_diana_rr.py --preset 100m --steps 300
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dist import CompressedAggregation
+from repro.data.reshuffle import ReshuffleSampler
+from repro.data.tokens import synthetic_token_batches
+from repro.launch import steps
+from repro.launch.mesh import make_test_mesh, num_clients
+from repro.models.config import ArchConfig
+
+PRESETS = {
+    # ~10M: CI-speed sanity run
+    "tiny": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+                 d_ff=1024, vocab=2048),
+    # ~100M-class model (the deliverable's end-to-end scale)
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+                 d_ff=3072, vocab=8192),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)  # global; 2 per client
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--fraction", type=float, default=0.05)
+    ap.add_argument("--agg", choices=("diana", "q", "dense"), default="diana")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = ArchConfig(name=f"lm-{args.preset}", family="dense",
+                     norm="rmsnorm", act="swiglu", **PRESETS[args.preset])
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    m = num_clients(mesh)
+    agg = CompressedAggregation(method=args.agg, wire="shared",
+                                fraction=args.fraction,
+                                shift_dtype=jnp.float32)
+    jitted, abstract, shardings, _ = steps.make_train_step(
+        cfg, mesh, agg=agg, lr=args.lr, remat=False)
+
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
+    print(f"model: {n_params/1e6:.1f}M params | clients={m} | agg={args.agg} "
+          f"(k/d={args.fraction}) | mesh=(data=4, model=2)")
+
+    # random-reshuffling data pipeline: each client re-permutes its local
+    # batches every epoch (the paper's 'RR' — a data-pipeline property)
+    n_batches = 8
+    data = synthetic_token_batches(
+        vocab=cfg.vocab, seq_len=args.seq, batch=args.batch // m,
+        num_batches=n_batches, num_clients=m, seed=0)
+    sampler = ReshuffleSampler(m, n_batches, mode="rr", seed=1)
+
+    with jax.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m), shardings)
+        key = jax.random.key(1)
+        order = sampler.epoch_order(0)
+        t0 = time.time()
+        first = last = None
+        for t in range(args.steps):
+            epoch, i = divmod(t, n_batches)
+            if i == 0:
+                order = sampler.epoch_order(epoch)
+            # batch leaves: (clients*local_batch, seq+1) stacked client-major
+            tok = np.concatenate(
+                [data[c, order[c, i]] for c in range(m)], axis=0)
+            batch = {"tokens": jnp.asarray(tok)}
+            state, metrics = jitted(state, batch, key)
+            if t % args.log_every == 0 or t == args.steps - 1:
+                loss = float(metrics["loss"])
+                first = first if first is not None else loss
+                last = loss
+                print(f"step {t:4d} | loss {loss:7.4f} | "
+                      f"gnorm {float(metrics['grad_norm']):8.3f} | "
+                      f"{(time.time()-t0)/(t+1):5.2f}s/step", flush=True)
+    print(f"loss: {first:.4f} -> {last:.4f} "
+          f"({'DECREASED' if last < first - 0.05 else 'no significant change'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Unbiased gradient compression operators (paper Assumption 1).
+
+Every operator Q satisfies  E[Q(x)] = x  and  E||Q(x) - x||^2 <= omega * ||x||^2
+for a known omega (except TopK, which is *biased* and included only as a
+contrast baseline — the paper's theory does not cover it).
+
+Operators act on flat vectors; `tree_compress` lifts them to pytrees
+(per-leaf compression with split PRNG keys, per-leaf omega bookkeeping).
+"""
+from repro.compression.ops import (
+    Compressor,
+    Identity,
+    RandK,
+    TopK,
+    QSGDQuantizer,
+    NaturalCompression,
+    tree_compress,
+    tree_compression_bits,
+    get_compressor,
+)
+
+__all__ = [
+    "Compressor",
+    "Identity",
+    "RandK",
+    "TopK",
+    "QSGDQuantizer",
+    "NaturalCompression",
+    "tree_compress",
+    "tree_compression_bits",
+    "get_compressor",
+]

@@ -1,0 +1,223 @@
+"""Compression operators.
+
+All operators are dataclass pytrees with static hyper-parameters so they can be
+closed over inside jit'd functions. `compress(key, x)` returns the *dense
+reconstruction* Q(x) (the algorithms' math needs the decompressed vector), and
+`bits(shape)` accounts for what would actually travel on the wire so the
+communication benchmarks can report honest byte counts.
+
+The sparse wire format for Rand-k (indices + values) is exposed separately via
+`randk_indices` / gather-scatter helpers; `repro.core.dist` uses those to build
+the shared-seed sparse collective path, and `repro.kernels` provides the Pallas
+TPU implementations of the same primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class Compressor(Protocol):
+    def compress(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Return the dense reconstruction Q(x)."""
+        ...
+
+    def omega(self, size: int) -> float:
+        """Variance bound omega for a vector of `size` elements."""
+        ...
+
+    def bits(self, size: int) -> int:
+        """Bits on the wire for a vector of `size` float32 elements."""
+        ...
+
+
+def _flatten(x: jax.Array) -> jax.Array:
+    return jnp.reshape(x, (-1,))
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    """No compression: Q(x) = x, omega = 0."""
+
+    def compress(self, key, x):
+        del key
+        return x
+
+    def omega(self, size):
+        del size
+        return 0.0
+
+    def bits(self, size):
+        return 32 * size
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK:
+    """Rand-k sparsification (Beznosikov et al., 2020).
+
+    Q(x) = (d/k) * sum_{i in S} x_i e_i with S uniform over k-subsets.
+    Unbiased; omega = d/k - 1 (exact). The paper's canonical operator
+    (k/d ~ 0.02 in the logreg experiments, 0.05 for ResNet).
+
+    `fraction` sets k = max(1, floor(fraction * d)) when `k` is None.
+    """
+
+    k: int | None = None
+    fraction: float | None = 0.02
+
+    def _k(self, size: int) -> int:
+        if self.k is not None:
+            return max(1, min(self.k, size))
+        return max(1, min(size, int(self.fraction * size)))
+
+    def indices(self, key, size: int) -> jax.Array:
+        k = self._k(size)
+        # uniform k-subset without replacement
+        return jax.random.choice(key, size, shape=(k,), replace=False)
+
+    def compress(self, key, x):
+        flat = _flatten(x)
+        d = flat.shape[0]
+        k = self._k(d)
+        idx = self.indices(key, d)
+        vals = flat[idx] * (d / k)
+        out = jnp.zeros_like(flat).at[idx].set(vals)
+        return jnp.reshape(out, x.shape)
+
+    def omega(self, size):
+        return size / self._k(size) - 1.0
+
+    def bits(self, size):
+        k = self._k(size)
+        # 32-bit value + ceil(log2(d))-bit index per coordinate
+        idx_bits = max(1, int(np.ceil(np.log2(max(size, 2)))))
+        return k * (32 + idx_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Top-k by magnitude. BIASED (kept as a contrast baseline only)."""
+
+    k: int | None = None
+    fraction: float | None = 0.02
+
+    def _k(self, size: int) -> int:
+        if self.k is not None:
+            return max(1, min(self.k, size))
+        return max(1, min(size, int(self.fraction * size)))
+
+    def compress(self, key, x):
+        del key
+        flat = _flatten(x)
+        k = self._k(flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return jnp.reshape(out, x.shape)
+
+    def omega(self, size):
+        # not an unbiased operator; report the delta-contraction instead
+        return float("nan")
+
+    def bits(self, size):
+        k = self._k(size)
+        idx_bits = max(1, int(np.ceil(np.log2(max(size, 2)))))
+        return k * (32 + idx_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDQuantizer:
+    """QSGD stochastic quantization (Alistarh et al., 2017).
+
+    Q(x) = ||x||_2 * sign(x) * u / s  with  u ~ stochastic rounding of
+    s*|x|/||x||_2 to the integer grid {0..s}.  Unbiased;
+    omega <= min(d/s^2, sqrt(d)/s).
+    """
+
+    levels: int = 8  # s
+
+    def compress(self, key, x):
+        flat = _flatten(x).astype(jnp.float32)
+        norm = jnp.linalg.norm(flat)
+        s = float(self.levels)
+        scaled = jnp.where(norm > 0, jnp.abs(flat) / norm * s, 0.0)
+        floor = jnp.floor(scaled)
+        prob = scaled - floor
+        u = floor + (jax.random.uniform(key, flat.shape) < prob)
+        out = norm * jnp.sign(flat) * u / s
+        return jnp.reshape(out, x.shape).astype(x.dtype)
+
+    def omega(self, size):
+        s = float(self.levels)
+        return min(size / s**2, np.sqrt(size) / s)
+
+    def bits(self, size):
+        # norm (32) + sign+level per coordinate
+        lvl_bits = max(1, int(np.ceil(np.log2(self.levels + 1)))) + 1
+        return 32 + size * lvl_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCompression:
+    """Natural compression (Horvath et al., 2019): stochastic rounding to
+    powers of two. Unbiased with omega = 1/8; ~9 bits/coordinate."""
+
+    def compress(self, key, x):
+        flat = _flatten(x).astype(jnp.float32)
+        absx = jnp.abs(flat)
+        # decompose |x| = 2^e * m, m in [1, 2)
+        safe = jnp.where(absx > 0, absx, 1.0)
+        e = jnp.floor(jnp.log2(safe))
+        lo = jnp.exp2(e)
+        # round to 2^e w.p. (2^{e+1}-|x|)/2^e else 2^{e+1} -> unbiased
+        p_up = (absx - lo) / lo
+        up = jax.random.uniform(key, flat.shape) < p_up
+        out = jnp.where(absx > 0, jnp.sign(flat) * lo * jnp.where(up, 2.0, 1.0), 0.0)
+        return jnp.reshape(out, x.shape).astype(x.dtype)
+
+    def omega(self, size):
+        del size
+        return 1.0 / 8.0
+
+    def bits(self, size):
+        return 9 * size
+
+
+def tree_compress(compressor, key: jax.Array, tree):
+    """Apply `compressor` leaf-wise with independent split keys."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [compressor.compress(k, leaf) for k, leaf in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_compression_bits(compressor, tree) -> int:
+    """Total wire bits for one compressed message of this pytree."""
+    return sum(compressor.bits(int(np.prod(leaf.shape))) for leaf in jax.tree.leaves(tree))
+
+
+def tree_omega(compressor, tree) -> float:
+    """Worst-case (max over leaves) omega for per-leaf compression."""
+    return max(compressor.omega(int(np.prod(leaf.shape))) for leaf in jax.tree.leaves(tree))
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "none": Identity,
+    "randk": RandK,
+    "topk": TopK,
+    "qsgd": QSGDQuantizer,
+    "natural": NaturalCompression,
+}
+
+
+def get_compressor(name: str, **kwargs) -> Compressor:
+    try:
+        return _REGISTRY[name](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown compressor {name!r}; options: {sorted(_REGISTRY)}")

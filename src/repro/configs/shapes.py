@@ -1,0 +1,94 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for every model input.
+
+The four shapes exercise three step kinds:
+  train_4k     -> train_step   (tokens + labels, full fwd/bwd + paper's agg)
+  prefill_32k  -> prefill_step (prompt forward, KV-cache build)
+  decode_32k   -> serve_step   (ONE token, KV cache of seq_len)
+  long_500k    -> serve_step   (ONE token, sub-quadratic archs only)
+
+`input_specs` returns weak-type-correct ShapeDtypeStructs — shardable,
+never allocated (the dry-run contract, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason). Skips follow DESIGN.md §Arch-applicability."""
+    if shape.name == "long_500k":
+        if not cfg.supports_long_context():
+            return False, (
+                "full-attention arch: 512k dense KV decode is out of scope "
+                "(needs sub-quadratic attention)"
+            )
+    if cfg.is_encdec and shape.name == "long_500k":
+        return False, "whisper decoder is full attention; real context <= 448"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape):
+    """Batch pytree ShapeDtypeStructs for loss_fn/train_step."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((b, cfg.vision_patches, cfg.d_model), cfg.dtype)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((b, cfg.vision_patches, cfg.d_model), cfg.dtype)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape):
+    """(cache_specs, tokens_spec, pos_spec) for serve_step."""
+    from repro.models.transformer import init_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(None, cfg, batch=b, cache_len=s)
+    )
+    return cache, _sds((b, 1), jnp.int32), _sds((), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape):
+    """Dict of kwargs-by-name for the step function this shape lowers."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    cache, tok, pos = decode_specs(cfg, shape)
+    return {"cache": cache, "tokens": tok, "pos": pos}

@@ -1,0 +1,20 @@
+"""stablelm-1.6b — [hf:stabilityai/stablelm-2-1_6b].
+
+24L d_model=2048 32H (GQA kv=32, i.e. MHA) d_ff=5632 vocab=100352.
+StableLM-2 uses LayerNorm + SwiGLU + (partial) RoPE; we apply full-dim RoPE.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=5632,
+    vocab=100352,
+    norm="layernorm",
+    act="swiglu",
+    rope_theta=10_000.0,
+)

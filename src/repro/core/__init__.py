@@ -1,0 +1,26 @@
+"""The paper's primary contribution: federated optimization with random
+reshuffling and gradient compression (Q-RR, DIANA-RR, Q-NASTYA,
+DIANA-NASTYA) plus every baseline it compares against, as composable JAX
+modules — a faithful simulator (`algorithms`) and the TPU-pod production
+wire (`dist`)."""
+from repro.core.api import FedState, init_state
+from repro.core.algorithms import (
+    ALGORITHMS,
+    AlgoSpec,
+    init_algorithm,
+    make_epoch_fn,
+    theoretical_stepsizes,
+)
+from repro.core.dist import CompressedAggregation, DianaState
+
+__all__ = [
+    "FedState",
+    "init_state",
+    "ALGORITHMS",
+    "AlgoSpec",
+    "init_algorithm",
+    "make_epoch_fn",
+    "theoretical_stepsizes",
+    "CompressedAggregation",
+    "DianaState",
+]

@@ -1,0 +1,303 @@
+"""The paper's federated optimization algorithms + the baselines it compares to.
+
+Two driver families cover all eleven methods:
+
+Non-local (communicate every iteration; Sec. 2.1-2.2):
+    sgd       distributed SGD, with-replacement           (Q=identity)
+    qsgd      Alistarh et al. 2017, with-replacement
+    rr        distributed Random Reshuffling              (Q=identity)
+    q_rr      Algorithm 2 (paper)   — RR + compression
+    diana     Mishchenko et al. 2019 — 1 shift / worker, with-replacement
+    diana_rr  Algorithm 3 (paper)   — RR + compression + n shifts / worker
+
+Local (communicate once per epoch of n local steps; Sec. 2.3-2.4):
+    fedavg        local SGD, with-replacement, server averaging
+    fedrr         Mishchenko et al. 2021 — local RR, server averaging
+    nastya        Malinovsky et al. 2022 — local RR, server stepsize
+    fedpaq        Reisizadeh et al. 2020 — local SGD + quantized update, avg
+    fedcom        Haddadpour et al. 2021 — local SGD + quantized update, eta
+    q_nastya      Algorithm 4 (paper)   — local RR + compression + eta
+    diana_nastya  Algorithm 5 (paper)   — Q-NASTYA + 1 shift / worker
+
+Every driver is a pure function ``epoch(state, data, key) -> FedState`` built
+by :func:`make_epoch_fn`, jit-compatible, with `lax.scan` over the inner
+iterations and `vmap` over clients. Stepsize defaults follow the theory
+(Theorems 1-4); pass explicit values to override (the paper multiplies the
+theoretical stepsize by a tuned constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.ops import Identity, tree_compression_bits
+from repro.core.api import (
+    FedState,
+    LossFn,
+    clients_grad,
+    init_state,
+    num_batches,
+    num_clients,
+    round_batches,
+    sample_permutations,
+    tree_mean_clients,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """Static description of a method in the paper's design space."""
+
+    name: str
+    family: str  # 'nonlocal' | 'local'
+    sampling: str  # 'rr' (without replacement) | 'wr' (with replacement)
+    shift_mode: str  # 'none' | 'single' | 'per_slot' | 'ef'
+    server_stepsize: bool = False  # local family: eta != gamma*n
+    default_compressed: bool = True  # identity-compressor methods set False
+
+
+ALGORITHMS: dict[str, AlgoSpec] = {
+    # non-local
+    "sgd": AlgoSpec("sgd", "nonlocal", "wr", "none", default_compressed=False),
+    "qsgd": AlgoSpec("qsgd", "nonlocal", "wr", "none"),
+    "rr": AlgoSpec("rr", "nonlocal", "rr", "none", default_compressed=False),
+    "q_rr": AlgoSpec("q_rr", "nonlocal", "rr", "none"),
+    "diana": AlgoSpec("diana", "nonlocal", "wr", "single"),
+    "diana_rr": AlgoSpec("diana_rr", "nonlocal", "rr", "per_slot"),
+    # beyond-paper: error feedback (Stich et al. 2018; the remedy the paper
+    # cites for BIASED compressors like Top-k) with RR sampling
+    "ef_topk_rr": AlgoSpec("ef_topk_rr", "nonlocal", "rr", "ef"),
+    # local
+    "fedavg": AlgoSpec("fedavg", "local", "wr", "none", default_compressed=False),
+    "fedrr": AlgoSpec("fedrr", "local", "rr", "none", default_compressed=False),
+    "nastya": AlgoSpec("nastya", "local", "rr", "none", server_stepsize=True,
+                       default_compressed=False),
+    "fedpaq": AlgoSpec("fedpaq", "local", "wr", "none"),
+    "fedcom": AlgoSpec("fedcom", "local", "wr", "none", server_stepsize=True),
+    "q_nastya": AlgoSpec("q_nastya", "local", "rr", "none", server_stepsize=True),
+    "diana_nastya": AlgoSpec("diana_nastya", "local", "rr", "single",
+                             server_stepsize=True),
+}
+
+
+def init_algorithm(spec: AlgoSpec, params, m: int, n: int) -> FedState:
+    """Build the initial FedState with the right shift layout for `spec`."""
+    if spec.shift_mode == "none":
+        shifts = None
+    elif spec.shift_mode in ("single", "ef"):
+        shifts = jax.tree.map(lambda p: jnp.zeros((m,) + p.shape, p.dtype), params)
+    elif spec.shift_mode == "per_slot":
+        shifts = jax.tree.map(lambda p: jnp.zeros((m, n) + p.shape, p.dtype), params)
+    else:
+        raise ValueError(spec.shift_mode)
+    server_h = tree_zeros_like(params) if spec.shift_mode == "single" else None
+    return init_state(params, shifts=shifts, server_h=server_h)
+
+
+def _compress_clients(comp, key, grads_stacked):
+    """vmap a per-client compression over the leading client axis.
+
+    Each client uses an independent key (the paper's Q are independent across
+    workers — this is what makes the 1/M variance factor appear).
+    """
+    m = jax.tree.leaves(grads_stacked)[0].shape[0]
+    keys = jax.random.split(key, m)
+
+    def one(k, g):
+        from repro.compression.ops import tree_compress
+
+        return tree_compress(comp, k, g)
+
+    return jax.vmap(one)(keys, grads_stacked)
+
+
+def _sample_round_indices(spec: AlgoSpec, key, m: int, n: int) -> jax.Array:
+    """(M, n) matrix of batch indices for one epoch."""
+    if spec.sampling == "rr":
+        return sample_permutations(key, m, n)
+    return jax.random.randint(key, (m, n), 0, n)
+
+
+# ---------------------------------------------------------------------------
+# non-local family: one compressed aggregation per iteration
+# ---------------------------------------------------------------------------
+
+def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
+                    alpha: float, state: FedState, data, key) -> FedState:
+    m, n = num_clients(data), num_batches(data)
+    k_idx, k_comp = jax.random.split(key)
+    idx = _sample_round_indices(spec, k_idx, m, n)  # (M, n)
+    step_keys = jax.random.split(k_comp, n)
+    arange_m = jnp.arange(m)
+
+    def step(carry, inp):
+        params, shifts = carry
+        col, k = inp  # col: (M,) batch index per client
+        batches = round_batches(data, col)
+        g = clients_grad(loss_fn, params, batches)  # leaves (M, ...)
+
+        if spec.shift_mode == "none":
+            ghat = _compress_clients(comp, k, g)
+            new_shifts = shifts
+        elif spec.shift_mode == "ef":
+            # error feedback: p_m = gamma*g_m + e_m; send C(p_m); keep the
+            # compression residual as next round's memory. The common
+            # `params - gamma*direction` update divides gamma back out.
+            p_t = jax.tree.map(lambda gi, e: gamma * gi + e, g, shifts)
+            qd = _compress_clients(comp, k, p_t)
+            new_shifts = jax.tree.map(jnp.subtract, p_t, qd)
+            ghat = jax.tree.map(lambda q: q / gamma, qd)
+        elif spec.shift_mode == "single":
+            delta = tree_sub(g, shifts)
+            qd = _compress_clients(comp, k, delta)
+            ghat = jax.tree.map(jnp.add, shifts, qd)
+            new_shifts = jax.tree.map(lambda h, q: h + alpha * q, shifts, qd)
+        elif spec.shift_mode == "per_slot":
+            h_i = jax.tree.map(lambda s: s[arange_m, col], shifts)
+            delta = tree_sub(g, h_i)
+            qd = _compress_clients(comp, k, delta)
+            ghat = jax.tree.map(jnp.add, h_i, qd)
+            new_shifts = jax.tree.map(
+                lambda s, q: s.at[arange_m, col].add(alpha * q), shifts, qd
+            )
+        else:
+            raise ValueError(spec.shift_mode)
+
+        direction = tree_mean_clients(ghat)
+        new_params = jax.tree.map(lambda p, d: p - gamma * d, params, direction)
+        return (new_params, new_shifts), None
+
+    (params, shifts), _ = jax.lax.scan(
+        step, (state.params, state.shifts), (idx.T, step_keys)
+    )
+    bits_per_round = float(m * tree_compression_bits(comp, state.params))
+    return state._replace(
+        params=params,
+        shifts=shifts,
+        rounds=state.rounds + n,
+        bits=state.bits + n * bits_per_round,
+    )
+
+
+# ---------------------------------------------------------------------------
+# local family: n local steps, one compressed aggregation per epoch
+# ---------------------------------------------------------------------------
+
+def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float,
+                 alpha: float, state: FedState, data, key) -> FedState:
+    m, n = num_clients(data), num_batches(data)
+    k_idx, k_comp = jax.random.split(key)
+    idx = _sample_round_indices(spec, k_idx, m, n)  # (M, n)
+
+    def client_run(params, client_data, order):
+        def lstep(x, i):
+            batch = jax.tree.map(lambda leaf: leaf[i], client_data)
+            g = jax.grad(loss_fn)(x, batch)
+            return jax.tree.map(lambda xi, gi: xi - gamma * gi, x, g), None
+
+        xn, _ = jax.lax.scan(lstep, params, order)
+        return xn
+
+    xns = jax.vmap(client_run, in_axes=(None, 0, 0))(state.params, data, idx)
+    # g_{t,m} = (x_t - x^n_{t,m}) / (gamma * n)   (Alg. 4/5 line 7)
+    g = jax.tree.map(lambda p, xn: (p - xn) / (gamma * n), state.params, xns)
+
+    if spec.shift_mode == "none":
+        ghat = _compress_clients(comp, k_comp, g)
+        shifts, server_h = state.shifts, state.server_h
+        direction = tree_mean_clients(ghat)
+    elif spec.shift_mode == "single":
+        delta = tree_sub(g, state.shifts)
+        qd = _compress_clients(comp, k_comp, delta)
+        mean_qd = tree_mean_clients(qd)
+        # \hat g_t = h_t + (1/M) sum_m Q(g_{t,m} - h_{t,m})   (Alg. 5 line 11)
+        direction = jax.tree.map(jnp.add, state.server_h, mean_qd)
+        shifts = jax.tree.map(lambda h, q: h + alpha * q, state.shifts, qd)
+        server_h = jax.tree.map(lambda h, q: h + alpha * q, state.server_h, mean_qd)
+    else:
+        raise ValueError(spec.shift_mode)
+
+    step = eta if spec.server_stepsize else gamma * n
+    params = jax.tree.map(lambda p, d: p - step * d, state.params, direction)
+    bits_per_round = float(m * tree_compression_bits(comp, state.params))
+    return state._replace(
+        params=params,
+        shifts=shifts,
+        server_h=server_h,
+        rounds=state.rounds + 1,
+        bits=state.bits + bits_per_round,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public factory
+# ---------------------------------------------------------------------------
+
+def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
+                  eta: float | None = None, alpha: float | None = None):
+    """Return (spec, epoch_fn) for algorithm `name`.
+
+    epoch_fn(state, data, key) -> FedState runs one full data epoch
+    (n communication rounds for non-local methods, 1 for local methods).
+    """
+    spec = ALGORITHMS[name]
+    comp = compressor
+    if comp is None or not spec.default_compressed and compressor is None:
+        comp = Identity()
+    if alpha is None:
+        # Theorems 2/4: alpha <= 1/(1+omega); identity => alpha=1
+        try:
+            om = max(comp.omega(1024), 0.0)
+        except Exception:
+            om = 0.0
+        alpha = 1.0 / (1.0 + (0.0 if om != om else om))  # NaN-safe (TopK)
+    if eta is None:
+        eta = gamma  # caller should set for server-stepsize methods
+
+    if spec.family == "nonlocal":
+        def epoch(state, data, key):
+            return _nonlocal_epoch(spec, loss_fn, comp, gamma, alpha, state, data, key)
+    else:
+        def epoch(state, data, key):
+            return _local_epoch(spec, loss_fn, comp, gamma, eta, alpha, state, data, key)
+
+    return spec, epoch
+
+
+def theoretical_stepsizes(name: str, *, l_max: float, mu: float, omega: float,
+                          m: int, n: int) -> dict[str, float]:
+    """Largest stepsizes allowed by Theorems 1-4 (and the baselines' papers).
+
+    The paper tunes a constant multiplier on top of these; we return the raw
+    theory values.
+    """
+    if name in ("q_rr", "rr"):
+        return {"gamma": 1.0 / ((1.0 + 2.0 * omega / m) * l_max)}
+    if name == "qsgd" or name == "sgd":
+        return {"gamma": 1.0 / ((1.0 + 2.0 * omega / m) * l_max)}
+    if name == "diana_rr":
+        alpha = 1.0 / (1.0 + omega)
+        gamma = min(alpha / (2.0 * n * mu), 1.0 / ((1.0 + 6.0 * omega / m) * l_max))
+        return {"gamma": gamma, "alpha": alpha}
+    if name == "diana":
+        alpha = 1.0 / (1.0 + omega)
+        gamma = 1.0 / ((1.0 + 6.0 * omega / m) * l_max)
+        return {"gamma": gamma, "alpha": alpha}
+    if name in ("q_nastya", "fedcom", "nastya"):
+        eta = 1.0 / (16.0 * l_max * (1.0 + omega / m))
+        gamma = 1.0 / (5.0 * n * l_max)
+        return {"gamma": gamma, "eta": eta}
+    if name == "diana_nastya":
+        alpha = 1.0 / (1.0 + omega)
+        eta = min(alpha / (2.0 * mu), 1.0 / (16.0 * l_max * (1.0 + 9.0 * omega / m)))
+        gamma = min(1.0 / (16.0 * l_max * n), eta / n)
+        return {"gamma": gamma, "eta": eta, "alpha": alpha}
+    if name in ("fedavg", "fedrr", "fedpaq"):
+        return {"gamma": 1.0 / (5.0 * n * l_max)}
+    raise ValueError(name)

@@ -1,0 +1,143 @@
+"""Core API for federated optimization algorithms.
+
+The simulator treats the federated system exactly as the paper does:
+`M` clients, each holding `n` minibatches; communication rounds alternate
+client computation with (possibly compressed) aggregation. Everything is a
+pytree and every driver is a pure `epoch(state, data, key) -> state` function,
+so algorithms compose with jit/vmap/scan and run unchanged under
+`shard_map` (see `repro.core.dist` for the pod execution path).
+
+Data layout: a *client-stacked* pytree whose leaves have shape
+``(M, n, *batch_shape)`` — M clients, n minibatches each (paper assumes equal
+n; `repro.data` pads uneven datasets the same way the paper's code assigns the
+remainder to the last worker).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Batch = Any
+LossFn = Callable[[Params, Batch], jax.Array]
+
+
+class FedState(NamedTuple):
+    """State carried across communication rounds.
+
+    shifts:    DIANA-style control variates. Layout depends on the algorithm:
+               - None                       (no variance reduction)
+               - leaves (M, *param_shape)   (DIANA, DIANA-NASTYA: 1/worker)
+               - leaves (M, n, *param_shape)(DIANA-RR: n shift vectors/worker)
+    server_h:  running mean shift  h_t = (1/M) sum_m h_{t,m}  (DIANA-NASTYA
+               server bookkeeping; None elsewhere).
+    rounds:    communication rounds elapsed (int32 scalar).
+    bits:      cumulative uplink bits actually sent by all clients (float32 —
+               can exceed int32 range on long runs).
+    """
+
+    params: Params
+    shifts: Any
+    server_h: Any
+    rounds: jax.Array
+    bits: jax.Array
+
+
+def init_state(params: Params, shifts: Any = None, server_h: Any = None) -> FedState:
+    return FedState(
+        params=params,
+        shifts=shifts,
+        server_h=server_h,
+        rounds=jnp.zeros((), jnp.int32),
+        bits=jnp.zeros((), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers (the lingua franca of every driver below)
+# ---------------------------------------------------------------------------
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_mean_clients(tree):
+    """Mean over the leading client axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_stack_clients(tree, m: int):
+    """Broadcast a pytree to M stacked client copies."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+
+
+def tree_dot(a, b) -> jax.Array:
+    parts = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, parts)
+
+
+def tree_sqnorm(a) -> jax.Array:
+    return tree_dot(a, a)
+
+
+def client_batch(data, m_idx, i_idx):
+    """Select minibatch i of client m from a client-stacked data pytree."""
+    return jax.tree.map(lambda leaf: leaf[m_idx, i_idx], data)
+
+
+def round_batches(data, perm_column):
+    """Batch `perm[m, i]` for every client m (one synchronous round).
+
+    perm_column: (M,) int32 — the i-th column of this epoch's permutations.
+    Returns leaves of shape (M, *batch_shape).
+    """
+    m = perm_column.shape[0]
+    return jax.tree.map(lambda leaf: leaf[jnp.arange(m), perm_column], data)
+
+
+def num_clients(data) -> int:
+    return jax.tree.leaves(data)[0].shape[0]
+
+
+def num_batches(data) -> int:
+    return jax.tree.leaves(data)[0].shape[1]
+
+
+def sample_permutations(key: jax.Array, m: int, n: int) -> jax.Array:
+    """Independent per-client permutations of [n] — the 'RR' in Q-RR."""
+    keys = jax.random.split(key, m)
+    return jax.vmap(lambda k: jax.random.permutation(k, n))(keys)
+
+
+def clients_grad(loss_fn: LossFn, params, batches):
+    """Per-client gradients: vmap(grad) over stacked client batches.
+
+    params are shared (the server iterate); batches leaves are (M, ...).
+    Returns a pytree with leaves (M, *param_shape).
+    """
+    g = jax.vmap(jax.grad(loss_fn), in_axes=(None, 0))(params, batches)
+    return g
+
+
+def clients_grad_at(loss_fn: LossFn, params_stacked, batches):
+    """Per-client gradients at per-client iterates (local methods)."""
+    return jax.vmap(jax.grad(loss_fn))(params_stacked, batches)

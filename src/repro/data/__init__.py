@@ -1,0 +1,15 @@
+from repro.data.logreg import (
+    LogRegProblem,
+    make_federated_logreg,
+    logreg_constants,
+)
+from repro.data.reshuffle import ReshuffleSampler
+from repro.data.tokens import synthetic_token_batches
+
+__all__ = [
+    "LogRegProblem",
+    "make_federated_logreg",
+    "logreg_constants",
+    "ReshuffleSampler",
+    "synthetic_token_batches",
+]

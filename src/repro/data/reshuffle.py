@@ -1,0 +1,52 @@
+"""Random-reshuffling batcher for production training.
+
+RR is a *data pipeline* property: once per epoch every client permutes its
+local dataset and walks it in order. On a pod the "client" is a data-parallel
+rank; this sampler produces, per epoch, the permutation matrix that the input
+pipeline uses to order host-side batches. It is deliberately host-side
+(numpy) — permutations never need to be on device, and keeping them out of
+the jit'd step preserves identical lowering between RR and with-replacement
+runs (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReshuffleSampler:
+    """Yields per-epoch, per-client batch orders.
+
+    mode:
+      'rr'  — fresh independent permutation per client per epoch (Q-RR,
+              Q-NASTYA, DIANA-NASTYA in the paper's experiments)
+      'rr_once' — single permutation sampled at epoch 0 and reused (Shuffle-
+              Once; the paper uses this for DIANA-RR so shift slots stay
+              aligned with datapoints)
+      'wr'  — with-replacement sampling (QSGD/DIANA/FedAvg baselines)
+    """
+
+    def __init__(self, num_clients: int, num_batches: int, *, mode: str = "rr",
+                 seed: int = 0):
+        if mode not in ("rr", "rr_once", "wr"):
+            raise ValueError(mode)
+        self.m = num_clients
+        self.n = num_batches
+        self.mode = mode
+        self._rng = np.random.default_rng(seed)
+        self._fixed: np.ndarray | None = None
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        """(M, n) int32 array of batch indices for this epoch."""
+        del epoch
+        if self.mode == "wr":
+            return self._rng.integers(0, self.n, size=(self.m, self.n)).astype(np.int32)
+        if self.mode == "rr_once":
+            if self._fixed is None:
+                self._fixed = self._permutations()
+            return self._fixed
+        return self._permutations()
+
+    def _permutations(self) -> np.ndarray:
+        return np.stack(
+            [self._rng.permutation(self.n) for _ in range(self.m)]
+        ).astype(np.int32)

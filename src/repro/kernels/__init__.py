@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compression hot spots.
+
+<name>.py = pl.pallas_call + BlockSpec; ops.py = jit wrappers; ref.py =
+pure-jnp oracles (the tests' allclose targets).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the Pallas kernels (padding, views, dispatch).
+
+On CPU (this container) every kernel runs in interpret mode — the kernel
+body executes in Python for correctness; on TPU the same `pallas_call`
+compiles to Mosaic. `ref.py` holds the pure-jnp oracles the tests compare
+against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.diana_shift import LANES, diana_shift_update as _shift_raw
+from repro.kernels.qsgd import TILE, qsgd_quantize as _qsgd_raw
+from repro.kernels.randk import BLOCK_ROWS, randk_compress, randk_decompress
+
+
+def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, n
+
+
+def qsgd(x: jax.Array, key: jax.Array, *, levels: int = 8) -> jax.Array:
+    """Blockwise-QSGD quantize->dequantize of an arbitrary-shape tensor."""
+    flat = x.reshape(-1)
+    padded, n = _pad_to(flat, TILE)
+    u = jax.random.uniform(key, padded.shape)
+    out = _qsgd_raw(padded, u, levels=levels)
+    return out[:n].reshape(x.shape)
+
+
+def diana_shift(h, q_own, mh, q_mean, *, alpha: float):
+    """Fused DIANA update on arbitrary-shape tensors (same shape each).
+
+    Returns (direction, h', H') — see kernels/diana_shift.py.
+    """
+    shape = h.shape
+    flats = [t.reshape(-1) for t in (h, q_own, mh, q_mean)]
+    padded = []
+    n = flats[0].shape[0]
+    for t in flats:
+        p, _ = _pad_to(t, LANES)
+        padded.append(p)
+    d, hn, mhn = _shift_raw(*padded, alpha=alpha)
+    return (d[:n].reshape(shape), hn[:n].reshape(shape), mhn[:n].reshape(shape))
+
+
+def randk_rows(rows: jax.Array, start_block: jax.Array, *, fraction: float,
+               block_rows: int = BLOCK_ROWS):
+    """Circular block Rand-k of a (N, D) row view.
+
+    Returns (values (K, D), reconstruct_fn) where reconstruct_fn scatters the
+    (possibly all-reduced) values back to a dense (N, D) canvas.
+    """
+    padded, n = _pad_to(rows, block_rows)
+    np_ = padded.shape[0]
+    nb = np_ // block_rows
+    k_blocks = max(1, int(fraction * nb))
+    vals = randk_compress(padded, start_block, k_blocks=k_blocks,
+                          block_rows=block_rows)
+
+    def reconstruct(v):
+        dense = randk_decompress(v, start_block, n_rows=np_,
+                                 block_rows=block_rows)
+        return dense[:n]
+
+    return vals, reconstruct
+
+
+__all__ = ["qsgd", "diana_shift", "randk_rows", "randk_compress",
+           "randk_decompress", "TILE", "LANES", "BLOCK_ROWS"]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: blockwise stochastic quantization (QSGD on VPU).
+
+GPU QSGD is an elementwise CUDA kernel with a *global* L2 scale — a bad fit
+for TPU (a global reduction before any quantization serializes the grid).
+The TPU-native adaptation quantizes per lane-aligned (8, 128) VMEM tile with
+a per-tile max-abs scale: one pass over HBM, scale + stochastic rounding
+fused, still unbiased conditional on the tile scale (DESIGN.md §3.4).
+
+The uniform randoms are generated OUTSIDE the kernel (jax.random.uniform) and
+streamed in — keeps the kernel deterministic and interpretable on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024  # one (8, 128) VPU tile
+_BLOCK_TILES = 8  # tiles per grid step: (64, 128) VMEM block
+
+
+def _qsgd_kernel(x_ref, u_ref, o_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)  # (tiles, TILE) block
+    u = u_ref[...]
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) + 1e-30
+    s = float(levels)
+    y = jnp.abs(x) / scale * s
+    f = jnp.floor(y)
+    q = f + (u < (y - f)).astype(jnp.float32)
+    o_ref[...] = (jnp.sign(x) * q * (scale / s)).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("levels", "interpret"))
+def qsgd_quantize(x: jax.Array, u: jax.Array, *, levels: int = 8,
+                  interpret: bool | None = None) -> jax.Array:
+    """x, u: (N,) with N % TILE == 0 (ops.py handles padding)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = x.shape[0]
+    tiles = n // TILE
+    bt = min(_BLOCK_TILES, tiles)
+    grid = (pl.cdiv(tiles, bt),)
+    xt = x.reshape(tiles, TILE)
+    ut = u.reshape(tiles, TILE)
+    out = pl.pallas_call(
+        partial(_qsgd_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((bt, TILE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, TILE), x.dtype),
+        interpret=interpret,
+    )(xt, ut)
+    return out.reshape(n)

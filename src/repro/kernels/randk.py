@@ -1,0 +1,92 @@
+"""Pallas TPU kernels: circular row-block gather/scatter (Rand-k wire).
+
+The production compressor (core/dist.py) selects a circular block of rows
+from the (n_rows, D) view of each gradient leaf. On GPU this is a gather
+kernel over scattered indices; on TPU the natural unit is a *block-aligned*
+circular window — the gather becomes `k_blocks` sequential VMEM copies whose
+source block index is computed from a prefetched scalar (`start_block`), so
+the whole compression is one HBM read of k rows, no index lists.
+
+  randk_compress:   rows (N, D), start -> (K, D) * (N/K)   [gather+scale]
+  randk_decompress: vals (K, D), start -> (N, D) zeros elsewhere [scatter]
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_ROWS = 8  # sublane-aligned row block
+
+
+def _gather_kernel(start_ref, x_ref, o_ref, *, scale: float):
+    del start_ref  # consumed by the index_map
+    o_ref[...] = (x_ref[...].astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("k_blocks", "block_rows", "interpret"))
+def randk_compress(rows: jax.Array, start_block: jax.Array, *, k_blocks: int,
+                   block_rows: int = BLOCK_ROWS,
+                   interpret: bool | None = None) -> jax.Array:
+    """rows: (N, D), N % block_rows == 0. Returns (k_blocks*block_rows, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n, d = rows.shape
+    nb = n // block_rows
+    scale = nb / k_blocks
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i, start: ((start[0] + i) % nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i, start: (i, 0)),
+    )
+    return pl.pallas_call(
+        partial(_gather_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k_blocks * block_rows, d), rows.dtype),
+        interpret=interpret,
+    )(start_block.reshape(1).astype(jnp.int32), rows)
+
+
+def _scatter_kernel(start_ref, vals_ref, o_ref, *, k_blocks: int, nb: int):
+    j = pl.program_id(0)
+    # offset of this output block inside the circular window (or >= k_blocks
+    # if the block is outside the window and must stay zero)
+    off = jax.lax.rem(j - start_ref[0] + nb, nb)
+    inside = off < k_blocks
+    o_ref[...] = jnp.where(inside, vals_ref[...], 0.0).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("n_rows", "block_rows", "interpret"))
+def randk_decompress(vals: jax.Array, start_block: jax.Array, *, n_rows: int,
+                     block_rows: int = BLOCK_ROWS,
+                     interpret: bool | None = None) -> jax.Array:
+    """vals: (K, D) -> (n_rows, D), zero outside the circular window."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    k, d = vals.shape
+    kb = k // block_rows
+    nb = n_rows // block_rows
+
+    def val_index(j, start):
+        off = jax.lax.rem(j - start[0] + nb, nb)
+        return (jnp.minimum(off, kb - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, d), val_index)],
+        out_specs=pl.BlockSpec((block_rows, d), lambda j, start: (j, 0)),
+    )
+    return pl.pallas_call(
+        partial(_scatter_kernel, k_blocks=kb, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), vals.dtype),
+        interpret=interpret,
+    )(start_block.reshape(1).astype(jnp.int32), vals)

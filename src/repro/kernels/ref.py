@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+All functions operate on the same padded/tiled views the kernels see, so
+tests compare bit-for-bit semantics (modulo float accumulation order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qsgd_quantize_ref(x: jax.Array, u: jax.Array, *, levels: int,
+                      tile: int = 1024) -> jax.Array:
+    """Blockwise stochastic quantization (TPU-native QSGD variant).
+
+    x: (N,) f32 with N % tile == 0; u: (N,) uniform [0,1) randoms.
+    Each `tile` block is scaled by its own max-abs (the lane-aligned
+    per-block scale that replaces QSGD's global L2 norm on TPU; unbiased
+    conditional on the block scale).
+    """
+    xt = x.reshape(-1, tile).astype(jnp.float32)
+    ut = u.reshape(-1, tile)
+    scale = jnp.max(jnp.abs(xt), axis=1, keepdims=True) + 1e-30
+    s = float(levels)
+    y = jnp.abs(xt) / scale * s
+    f = jnp.floor(y)
+    q = f + (ut < (y - f)).astype(jnp.float32)
+    out = jnp.sign(xt) * q * (scale / s)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def randk_compress_ref(rows: jax.Array, start_block: jax.Array, *,
+                       k_blocks: int, block_rows: int) -> jax.Array:
+    """Circular block-aligned row gather + unbiased (n/k) scaling.
+
+    rows: (N, D) with N % block_rows == 0. Returns (k_blocks*block_rows, D).
+    """
+    n, d = rows.shape
+    nb = n // block_rows
+    blocks = rows.reshape(nb, block_rows, d)
+    idx = (start_block + jnp.arange(k_blocks)) % nb
+    vals = blocks[idx].reshape(k_blocks * block_rows, d)
+    return vals * (nb / k_blocks)
+
+
+def randk_decompress_ref(vals: jax.Array, start_block: jax.Array, *,
+                         n_rows: int, block_rows: int) -> jax.Array:
+    """Scatter the compressed row-block back into an (N, D) zero canvas."""
+    k, d = vals.shape
+    kb = k // block_rows
+    nb = n_rows // block_rows
+    canvas = jnp.zeros((nb, block_rows, d), vals.dtype)
+    idx = (start_block + jnp.arange(kb)) % nb
+    canvas = canvas.at[idx].set(vals.reshape(kb, block_rows, d))
+    return canvas.reshape(n_rows, d)
+
+
+def diana_shift_update_ref(h, q_own, mh, q_mean, alpha: float):
+    """Fused DIANA state update (Algorithm 3/5 lines 7-11):
+        direction = H_t + Q_mean
+        h'        = h  + alpha * Q_own
+        H'        = H_t + alpha * Q_mean
+    Returns (direction, h', H'). All f32 math, cast back to input dtypes.
+    """
+    f = jnp.float32
+    direction = mh.astype(f) + q_mean.astype(f)
+    h_new = h.astype(f) + alpha * q_own.astype(f)
+    mh_new = mh.astype(f) + alpha * q_mean.astype(f)
+    return (direction.astype(q_mean.dtype), h_new.astype(h.dtype),
+            mh_new.astype(mh.dtype))

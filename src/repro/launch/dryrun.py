@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each combination this proves, without hardware:
+  - the sharding config is coherent (no mismatched collectives),
+  - the per-device memory fits (memory_analysis),
+  - and it yields the FLOPs/bytes/collective numbers for EXPERIMENTS.md
+    (§Dry-run, §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (
+    ARCH_NAMES,
+    INPUT_SHAPES,
+    get_config,
+    input_specs,
+    shape_supported,
+)
+from repro.core.dist import CompressedAggregation
+from repro.launch import steps
+from repro.launch.hlo_analysis import (
+    Roofline,
+    collective_stats,
+    memory_summary,
+    roofline_from_compiled,
+)
+from repro.models import flags
+from repro.launch.mesh import make_production_mesh, num_clients
+from repro.models import transformer
+
+
+def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
+                 ce: str = "gather", seq_shard: bool = True):
+    """Lower + compile the step this shape exercises for config `cfg`."""
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        jitted, abstract, shardings, _ = steps.make_train_step(
+            cfg, mesh, agg=agg, remat=remat, unroll=unroll, ce=ce,
+            seq_shard=seq_shard
+        )
+        key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(abstract, specs["batch"], key)
+    elif shape.kind == "prefill":
+        prefill, lower_args = steps.make_prefill_step(
+            cfg, mesh, cache_len=shape.seq_len, remat=remat, unroll=unroll
+        )
+        params_abs = jax.eval_shape(
+            lambda: transformer.init_params(jax.random.key(0), cfg)
+        )
+        jitted = lower_args(params_abs, specs["batch"])
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(params_abs, specs["batch"])
+    else:  # decode
+        serve, lower_args = steps.make_serve_step(cfg, mesh, unroll=unroll)
+        params_abs = jax.eval_shape(
+            lambda: transformer.init_params(jax.random.key(0), cfg)
+        )
+        jitted, _ = lower_args(params_abs, specs["cache"], specs["tokens"])
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(params_abs, specs["cache"],
+                                   specs["tokens"], specs["pos"])
+    return lowered.compile()
+
+
+def _probe_cfg(cfg, k: int):
+    changes = {"num_layers": k}
+    if cfg.encoder_layers:
+        changes["encoder_layers"] = k
+    return dataclasses.replace(cfg, **changes)
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
+               agg_method: str = "diana", agg_wire: str = "shared",
+               fraction: float = 0.02, remat="full", ce: str = "gather",
+               seq_shard: bool = True, probes: bool = True,
+               extra_tags: dict | None = None):
+    """Lower + compile one (arch, shape, mesh). Returns a result dict.
+
+    Protocol (DESIGN.md §6): the FULL-depth model is compiled with the
+    production `lax.scan` layer loop — that is the must-succeed dry-run and
+    the source of `memory_analysis()` (scan gives true buffer reuse). XLA's
+    cost model counts loop bodies once, so FLOPs/bytes/collective terms come
+    from two shallow FULLY-UNROLLED depth probes (k=1, 2 layers, inner scans
+    unrolled too) extrapolated affinely to the real depth — every per-layer
+    term (compute, HBM traffic, gradient-compression collectives) is exactly
+    affine in layer count.
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    m = num_clients(mesh)
+    agg = CompressedAggregation(method=agg_method, wire=agg_wire,
+                                fraction=fraction)
+    n_dev = mesh.devices.size
+
+    # 1) full-depth scan compile: the dry-run proper + memory analysis
+    t0 = time.time()
+    flags.set_unroll_inner_scans(False)
+    compiled_full = _compile_one(cfg, shape, mesh, agg, remat=remat,
+                                 unroll=False, ce=ce, seq_shard=seq_shard)
+    t_full = time.time() - t0
+    mem = memory_summary(compiled_full)
+    roof_scan = roofline_from_compiled(compiled_full, n_dev)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": n_dev,
+        "clients": m,
+        "agg": {"method": agg_method, "wire": agg_wire, "fraction": fraction},
+        "remat": str(remat),
+        "ce": ce,
+        "seq_shard": seq_shard,
+        "compile_s": round(t_full, 1),
+        "memory": mem,
+        "roofline_scan_raw": roof_scan.as_dict(),
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+
+    # 2) depth probes (unrolled) -> affine extrapolation of cost terms
+    if probes:
+        t1 = time.time()
+        flags.set_unroll_inner_scans(True)
+        try:
+            probes_raw = {}
+            for k in (1, 2):
+                ck = _compile_one(_probe_cfg(cfg, k), shape, mesh, agg,
+                                  remat=remat, unroll=True, ce=ce,
+                                  seq_shard=seq_shard)
+                probes_raw[k] = roofline_from_compiled(ck, n_dev)
+                result.setdefault("top_collectives", {})[k] = [
+                    (f"{b:.3e}", kind, shp)
+                    for b, kind, shp in collective_stats(ck.as_text()).top[:5]
+                ]
+        finally:
+            flags.set_unroll_inner_scans(False)
+        L = cfg.num_layers
+        def extrap(term):
+            f1, f2 = getattr(probes_raw[1], term), getattr(probes_raw[2], term)
+            return max(f1 + (L - 1) * (f2 - f1), f1)
+        roof = Roofline(
+            flops=extrap("flops"),
+            hbm_bytes=extrap("hbm_bytes"),
+            collective_bytes=extrap("collective_bytes"),
+            n_devices=n_dev,
+        )
+        result["probe_s"] = round(time.time() - t1, 1)
+        result["probes"] = {k: v.as_dict() for k, v in probes_raw.items()}
+        result["roofline"] = roof.as_dict()
+    else:
+        result["roofline"] = roof_scan.as_dict()
+
+    if extra_tags:
+        result.update(extra_tags)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--agg", default="diana",
+                    choices=("dense", "q", "diana"))
+    ap.add_argument("--wire", default="shared",
+                    choices=("shared", "independent"))
+    ap.add_argument("--fraction", type=float, default=0.02)
+    ap.add_argument("--remat", default="full", choices=("full", "dots", "none"))
+    ap.add_argument("--ce", default="gather", choices=("streaming", "gather"))
+    ap.add_argument("--seq-shard", dest="seq_shard", action="store_true", default=True)
+    ap.add_argument("--no-seq-shard", dest="seq_shard", action="store_false")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled depth probes (report raw scan "
+                         "cost terms, which count loop bodies once)")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--tag", default=None, help="label stored with results")
+    args = ap.parse_args(argv)
+
+    pairs = (
+        [(a, s) for a in ARCH_NAMES for s in INPUT_SHAPES]
+        if args.all else [(args.arch, args.shape)]
+    )
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape in pairs:
+        for multi in meshes:
+            try:
+                res = lower_pair(
+                    arch, shape, multi_pod=multi, agg_method=args.agg,
+                    agg_wire=args.wire, fraction=args.fraction,
+                    remat=args.remat, ce=args.ce, seq_shard=args.seq_shard,
+                    probes=not args.no_probes,
+                    extra_tags={"tag": args.tag} if args.tag else None,
+                )
+            except Exception as e:  # a dry-run failure is a sharding bug
+                failures += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if multi else "single",
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            line = json.dumps(res)
+            print(line, flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Post-compile HLO analysis: collective byte accounting + roofline terms.
+
+`cost_analysis()` has no collective statistics, so we parse the compiled
+HLO text: every `all-gather` / `all-reduce` / `reduce-scatter` /
+`all-to-all` / `collective-permute` instruction's operand bytes are summed
+(per device — the compiled module is the per-device SPMD program).
+
+Hardware model (TPU v5e targets, DESIGN.md §6):
+    peak bf16 compute  197 TFLOP/s / chip
+    HBM bandwidth      819 GB/s / chip
+    ICI                ~50 GB/s / link (per direction)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+\[[^\]]*\]\S*)\s+([\w\-]+)\(")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of one HLO shape string (handles tuple shapes)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+    top: list[tuple[float, str, str]] = dataclasses.field(default_factory=list)
+    # (bytes, op kind, shape string) of the largest collectives — the
+    # §Perf diagnosis view ("which tensor is being gathered?")
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str, top_n: int = 8) -> CollectiveStats:
+    """Sum output-shape bytes of every collective instruction.
+
+    For all-reduce / all-to-all / collective-permute the output shape equals
+    the operand shape (the wire bytes). For all-gather the output is the
+    gathered (larger) buffer — an upper bound on wire traffic; for
+    reduce-scatter the output is the scattered (smaller) buffer — we scale
+    by the group factor where derivable, else keep the conservative value.
+    """
+    bytes_by_kind: dict[str, float] = {}
+    count_by_kind: dict[str, int] = {}
+    tops: list[tuple[float, str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, shape_str, op = m.groups()
+        base = op.removesuffix("-start").removesuffix("-done")
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        bytes_by_kind[base] = bytes_by_kind.get(base, 0.0) + b
+        count_by_kind[base] = count_by_kind.get(base, 0) + 1
+        tops.append((b, base, shape_str[:80]))
+    tops.sort(reverse=True)
+    return CollectiveStats(bytes_by_kind, count_by_kind, tops[:top_n])
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term per-device roofline (seconds)."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    n_devices: int
+    ici_links: int = 4  # v5e 2D torus: 4 links/chip
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (ICI_BW * self.ici_links)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, n_devices: int) -> Roofline:
+    """Roofline terms from a compiled executable. cost_analysis() on this
+    JAX/XLA build reports PER-DEVICE flops/bytes (verified in DESIGN.md §6)."""
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    stats = collective_stats(compiled.as_text())
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=stats.total_bytes,
+        n_devices=n_devices,
+    )
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

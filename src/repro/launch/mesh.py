@@ -1,0 +1,46 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (DESIGN.md §6 / dry-run contract)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    Axes: ("data", "model") or ("pod", "data", "model"). The paper's M
+    federated clients are the ("pod", "data") ranks; "model" is 16-way
+    tensor parallelism inside each client.
+    """
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            "launch/dryrun.py (it forces 512 host devices) or on real hardware"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests on forced host devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def client_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes that enumerate federated clients (everything but TP)."""
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def num_clients(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in client_axes(mesh)]))

@@ -1,0 +1,3 @@
+from repro.models.config import ArchConfig
+
+__all__ = ["ArchConfig"]

@@ -1,0 +1,17 @@
+"""Trace-time flags (set before lowering; never mutated inside jit).
+
+UNROLL_INNER_SCANS: unroll the kv-block / linear-attention-chunk scans so
+XLA's cost analysis counts every iteration (it counts a while-loop body
+ONCE regardless of trip count). Used only by the dry-run's shallow
+depth-probe lowerings — production keeps rolled loops.
+"""
+UNROLL_INNER_SCANS = False
+
+
+def set_unroll_inner_scans(value: bool) -> None:
+    global UNROLL_INNER_SCANS
+    UNROLL_INNER_SCANS = bool(value)
+
+
+def inner_scan_unroll():
+    return True if UNROLL_INNER_SCANS else 1

@@ -1,0 +1,143 @@
+"""Chunked (gated) linear attention — the TPU-native form of recurrent mixers.
+
+One engine serves two families (DESIGN.md §4):
+  - RWKV6 ("Finch"): per-channel data-dependent decay w_t in (0,1)^{dk},
+    output at t reads the PRE-update state plus a "bonus" u on the current
+    token (exclusive scores, s < t).
+  - Mamba-2 / SSD (Hymba's SSM heads): scalar per-head decay a_t, output
+    reads the POST-update state (inclusive scores, s <= t).
+
+Instead of a T-step sequential scan (hopeless on the MXU), the sequence is
+split into chunks of length C: intra-chunk interactions are dense matmuls
+with decay-weighted masks, and only the (B, H, dk, dv) state crosses chunk
+boundaries via `lax.scan`. This is the standard GLA chunk decomposition;
+the per-channel variant is stabilized by clamping log-decay per step to
+[-LOG_DECAY_CLAMP, 0) so intra-chunk exp() factors stay in f32 range
+(|la| <= C * clamp = 64 * 1.25 = 80 < 88). C=64 feeds the MXU 64-wide
+intra-chunk matmuls (C=32 underutilizes the 128x128 systolic array even
+more; C=128 would need clamp <= 0.69, too restrictive a floor on decay).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+LOG_DECAY_CLAMP = 1.25
+CHUNK = 64
+
+
+def chunked_linear_attention(r, k, v, log_decay, *, bonus=None, inclusive: bool,
+                             initial_state=None, chunk: int = CHUNK):
+    """r, k: (B, S, H, dk); v: (B, S, H, dv).
+
+    log_decay: (B, S, H, dk) per-channel (RWKV6) or (B, S, H) scalar (SSD);
+               values must be <= 0 (decay in (0, 1]).
+    bonus:     (H, dk) — RWKV6's u term on the current token (exclusive mode).
+    inclusive: scores include s == t (SSD) or not (RWKV6).
+    Returns (out (B, S, H, dv), final_state (B, H, dk, dv)).
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    scalar_decay = log_decay.ndim == 3
+    if scalar_decay:
+        log_decay = log_decay[..., None]  # broadcast channel dim of size 1
+
+    c = min(chunk, s)
+    assert s % c == 0, f"seq {s} must divide chunk {c}"
+    nc = s // c
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(b, nc, c, *x.shape[2:]), 1, 0)
+
+    # streams stay in their storage dtype (bf16) across the chunk scan and
+    # are cast to f32 one chunk at a time inside the body — §Perf change C:
+    # the S-length f32 copies of r/k/v doubled the SSD path's HBM traffic.
+    # log-decay must remain f32 (cumsum/exp error compounds over the chunk).
+    r_c, k_c, v_c = to_chunks(r), to_chunks(k), to_chunks(v)
+    lw_c = to_chunks(jnp.clip(log_decay.astype(jnp.float32), -LOG_DECAY_CLAMP, 0.0))
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, dk, v.shape[-1]), jnp.float32)
+
+    mask = jnp.tril(jnp.ones((c, c), bool), 0 if inclusive else -1)
+
+    def body(state, xs):
+        rc, kc, vc, lwc = xs  # (B, C, H, dk/dv)
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        la = jnp.cumsum(lwc, axis=1)  # inclusive cumulative log decay
+        la_q = la if inclusive else la - lwc  # exclusive for rwkv
+        r_t = rc * jnp.exp(la_q)  # decayed queries
+        k_t = kc * jnp.exp(-la)  # inverse-decayed keys (clamp keeps range)
+        # inter-chunk: read carried state
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_t, state)
+        # intra-chunk: masked decay-weighted scores
+        scores = jnp.einsum("bqhk,bshk->bhqs", r_t, k_t)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        o_intra = jnp.einsum("bhqs,bshv->bqhv", scores, vc)
+        if bonus is not None:
+            diag = jnp.einsum("bchk,hk,bchk->bch", rc, bonus.astype(jnp.float32), kc)
+            o_intra = o_intra + diag[..., None] * vc
+        # state update: S' = exp(la_C) . S + sum_s exp(la_C - la_s) k_s v_s^T
+        la_end = la[:, -1:]  # (B, 1, H, dk)
+        k_carry = kc * jnp.exp(la_end - la)
+        decay_state = jnp.exp(la_end[:, 0])  # (B, H, dk)
+        new_state = state * decay_state[..., None] + jnp.einsum(
+            "bshk,bshv->bhkv", k_carry, vc
+        )
+        return new_state, o_inter + o_intra
+
+    from repro.models import flags
+
+    final_state, out = lax.scan(body, initial_state, (r_c, k_c, v_c, lw_c),
+                                unroll=flags.inner_scan_unroll())
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, dv)
+    return out.astype(r.dtype), final_state
+
+
+def linear_attention_decode(r, k, v, log_decay, state, *, bonus=None,
+                            inclusive: bool):
+    """One-token recurrent step.
+
+    r, k: (B, H, dk); v: (B, H, dv); log_decay per-channel (B, H, dk) or
+    scalar (B, H); state (B, H, dk, dv). Returns (out (B, H, dv), new_state).
+    """
+    r32, k32, v32 = (x.astype(jnp.float32) for x in (r, k, v))
+    ld = jnp.clip(log_decay.astype(jnp.float32), -LOG_DECAY_CLAMP, 0.0)
+    if ld.ndim == 2:
+        ld = ld[..., None]
+    w = jnp.exp(ld)  # (B, H, dk)
+    kv = jnp.einsum("bhk,bhv->bhkv", k32, v32)
+    if inclusive:
+        new_state = state * w[..., None] + kv
+        out = jnp.einsum("bhk,bhkv->bhv", r32, new_state)
+    else:
+        read = state + (bonus.astype(jnp.float32)[None, :, :, None] * kv
+                        if bonus is not None else kv * 0.0)
+        out = jnp.einsum("bhk,bhkv->bhv", r32, read)
+        new_state = state * w[..., None] + kv
+    return out.astype(r.dtype), new_state
+
+
+def reference_linear_attention(r, k, v, log_decay, *, bonus=None, inclusive: bool,
+                               initial_state=None):
+    """O(T) sequential oracle for tests (pure scan, f64-friendly)."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    ld = log_decay if log_decay.ndim == 4 else log_decay[..., None]
+
+    def step(state, xs):
+        rt, kt, vt, lt = xs
+        out, state = linear_attention_decode(
+            rt, kt, vt, lt if log_decay.ndim == 4 else lt[..., 0],
+            state, bonus=bonus, inclusive=inclusive,
+        )
+        return state, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, ld))
+    state, outs = lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(outs, 0, 1), state

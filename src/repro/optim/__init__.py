@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adamw,
+    clip_by_global_norm,
+)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw", "clip_by_global_norm"]

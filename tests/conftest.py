@@ -1,0 +1,9 @@
+"""Force 8 host devices for the test session.
+
+The dist-layer tests need a small multi-device mesh. 8 devices keeps the
+smoke tests fast on one CPU core. The 512-device production mesh is ONLY
+created by launch/dryrun.py (per its own XLA_FLAGS header) — never here.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

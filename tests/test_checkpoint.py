@@ -1,0 +1,54 @@
+"""Checkpoint round-trips, including bf16 leaves and sharded restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, restore_train_state, save_pytree
+from repro.configs import get_config, reduced
+from repro.core.dist import CompressedAggregation
+from repro.launch import steps
+from repro.launch.mesh import make_test_mesh, num_clients
+from repro.models import transformer as T
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5,
+              "d": jnp.zeros((), jnp.int32)},
+    }
+    p = str(tmp_path / "ck.msgpack")
+    save_pytree(p, tree, step=7)
+    got = load_pytree(p, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_missing_leaf_raises(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    save_pytree(p, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        load_pytree(p, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+def test_sharded_train_state_restore(tmp_path):
+    cfg = reduced(get_config("stablelm-1.6b"), seq=16)
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    agg = CompressedAggregation(method="diana", fraction=0.25,
+                                shift_dtype=jnp.float32)
+    state = steps.init_train_state(jax.random.key(0), cfg, agg,
+                                   num_clients(mesh))
+    _, abstract, shardings, _ = steps.make_train_step(cfg, mesh, agg=agg,
+                                                      remat=False)
+    p = str(tmp_path / "state.msgpack")
+    save_pytree(p, state)
+    restored = restore_train_state(p, abstract, shardings)
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

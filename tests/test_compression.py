@@ -1,0 +1,143 @@
+"""Compression operators: Assumption 1 (unbiasedness + omega variance bound),
+bit accounting, and pytree lifting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression.ops import (
+    Identity,
+    NaturalCompression,
+    QSGDQuantizer,
+    RandK,
+    TopK,
+    get_compressor,
+    tree_compress,
+    tree_compression_bits,
+)
+
+UNBIASED = [
+    RandK(fraction=0.25),
+    RandK(k=3),
+    QSGDQuantizer(levels=4),
+    NaturalCompression(),
+]
+
+
+@pytest.mark.parametrize("comp", UNBIASED, ids=lambda c: type(c).__name__ + str(getattr(c, "k", "")))
+def test_unbiased(comp):
+    d = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(1), trials)
+    qs = jax.vmap(lambda k: comp.compress(k, x))(keys)
+    mean = np.asarray(jnp.mean(qs, axis=0))
+    # standard error of the MC mean
+    se = np.asarray(jnp.std(qs, axis=0)) / np.sqrt(trials)
+    assert np.all(np.abs(mean - np.asarray(x)) < 6 * se + 1e-4)
+
+
+@pytest.mark.parametrize("comp", UNBIASED, ids=lambda c: type(c).__name__ + str(getattr(c, "k", "")))
+def test_omega_bound(comp):
+    d = 64
+    x = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    trials = 2000
+    keys = jax.random.split(jax.random.PRNGKey(3), trials)
+    qs = jax.vmap(lambda k: comp.compress(k, x))(keys)
+    var = float(jnp.mean(jnp.sum((qs - x[None]) ** 2, axis=-1)))
+    bound = comp.omega(d) * float(jnp.sum(x**2))
+    assert var <= bound * 1.15 + 1e-6  # 15% MC slack
+
+
+def test_randk_omega_exact():
+    # For Rand-k the bound is tight: E||Q-x||^2 = (d/k - 1)||x||^2
+    comp = RandK(k=4)
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    keys = jax.random.split(jax.random.PRNGKey(5), 20000)
+    qs = jax.vmap(lambda k: comp.compress(k, x))(keys)
+    var = float(jnp.mean(jnp.sum((qs - x[None]) ** 2, axis=-1)))
+    expect = (d / 4 - 1) * float(jnp.sum(x**2))
+    assert abs(var - expect) / expect < 0.05
+
+
+def test_randk_sparsity_and_scale():
+    comp = RandK(k=5)
+    x = jnp.arange(1.0, 41.0)
+    q = comp.compress(jax.random.PRNGKey(0), x)
+    nz = np.nonzero(np.asarray(q))[0]
+    assert len(nz) == 5
+    np.testing.assert_allclose(np.asarray(q)[nz], np.asarray(x)[nz] * 40 / 5, rtol=1e-6)
+
+
+def test_topk_selects_largest():
+    comp = TopK(k=3)
+    x = jnp.array([0.1, -5.0, 0.2, 4.0, -0.3, 3.0])
+    q = np.asarray(comp.compress(jax.random.PRNGKey(0), x))
+    assert set(np.nonzero(q)[0]) == {1, 3, 5}
+
+
+def test_identity():
+    x = jnp.arange(8.0)
+    assert np.all(np.asarray(Identity().compress(jax.random.PRNGKey(0), x)) == np.asarray(x))
+    assert Identity().omega(8) == 0.0
+
+
+def test_qsgd_levels_grid():
+    comp = QSGDQuantizer(levels=4)
+    x = jax.random.normal(jax.random.PRNGKey(6), (32,))
+    q = comp.compress(jax.random.PRNGKey(7), x)
+    norm = float(jnp.linalg.norm(x))
+    lv = np.asarray(jnp.abs(q)) / norm * 4
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-4)
+
+
+def test_tree_compress_and_bits():
+    tree = {"a": jnp.ones((8, 4)), "b": jnp.ones((10,))}
+    comp = RandK(fraction=0.5)
+    out = tree_compress(comp, jax.random.PRNGKey(0), tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert out["a"].shape == (8, 4)
+    bits = tree_compression_bits(comp, tree)
+    assert bits == comp.bits(32) + comp.bits(10)
+    assert bits < tree_compression_bits(Identity(), tree)
+
+
+def test_registry():
+    assert isinstance(get_compressor("randk", k=2), RandK)
+    assert isinstance(get_compressor("qsgd"), QSGDQuantizer)
+    with pytest.raises(ValueError):
+        get_compressor("nope")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=257),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_randk_shape_dtype_property(d, frac, seed):
+    """Property: any size/fraction/seed -> output preserves shape & dtype and
+    contains exactly min(d, max(1, floor(frac*d))) non-zeros (a.s.)."""
+    comp = RandK(fraction=frac)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32) + 1.0
+    q = comp.compress(jax.random.PRNGKey(seed + 1), x)
+    assert q.shape == x.shape and q.dtype == x.dtype
+    k = max(1, min(d, int(frac * d)))
+    assert int(jnp.sum(q != 0)) == k
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.sampled_from([(16,), (4, 8), (2, 3, 5)]),
+    levels=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_qsgd_shape_property(shape, levels, seed):
+    comp = QSGDQuantizer(levels=levels)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    q = comp.compress(jax.random.PRNGKey(seed + 1), x)
+    assert q.shape == x.shape
+    # reconstruction norm can't exceed (1 + 1/s)*||x|| by construction grid
+    assert float(jnp.max(jnp.abs(q))) <= float(jnp.linalg.norm(x)) * (1 + 1 / levels) + 1e-5

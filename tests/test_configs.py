@@ -1,0 +1,90 @@
+"""Config registry: exact assigned hyper-parameters + shape support matrix."""
+import pytest
+
+from repro.configs import (
+    ARCH_NAMES,
+    INPUT_SHAPES,
+    all_configs,
+    get_config,
+    reduced,
+    shape_supported,
+)
+
+# (layers, d_model, heads, kv, d_ff, vocab) exactly as assigned
+ASSIGNED = {
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+    "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_assigned_hparams_exact(name):
+    cfg = get_config(name)
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab) == ASSIGNED[name]
+
+
+def test_all_ten_archs_present():
+    assert len(ARCH_NAMES) == 10
+    assert set(ASSIGNED) == set(ARCH_NAMES)
+
+
+def test_moe_routing_params():
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.num_experts, q.experts_per_token) == (60, 4)
+    assert q.shared_expert_ff == 4 * 1408
+    d = get_config("dbrx-132b")
+    assert (d.num_experts, d.experts_per_token) == (16, 4)
+
+
+def test_param_counts_in_expected_range():
+    """Nameplate sizes within ~20% (sanity on the model definitions)."""
+    expect = {
+        "stablelm-1.6b": 1.6e9, "deepseek-67b": 67e9, "rwkv6-7b": 7e9,
+        "hymba-1.5b": 1.5e9, "starcoder2-15b": 15e9, "qwen2-vl-2b": 2e9,
+        "qwen2.5-32b": 32e9, "qwen2-moe-a2.7b": 14e9, "whisper-medium": 0.7e9,
+        "dbrx-132b": 132e9,
+    }
+    for name, target in expect.items():
+        n = get_config(name).param_count()
+        assert 0.6 * target < n < 1.6 * target, f"{name}: {n:.3g} vs {target:.3g}"
+
+
+def test_active_params_moe():
+    d = get_config("dbrx-132b")
+    assert d.active_param_count() < 0.45 * d.param_count()
+
+
+def test_long_context_support_matrix():
+    """long_500k runs exactly for the sub-quadratic archs (DESIGN.md)."""
+    shape = INPUT_SHAPES["long_500k"]
+    runnable = {n for n in ARCH_NAMES
+                if shape_supported(get_config(n), shape)[0]}
+    assert runnable == {"rwkv6-7b", "hymba-1.5b", "starcoder2-15b"}
+    # every other shape runs for every arch
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for n in ARCH_NAMES:
+            assert shape_supported(get_config(n), INPUT_SHAPES[s])[0]
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_within_smoke_budget(name):
+    cfg = reduced(get_config(name))
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.family == get_config(name).family
+
+
+def test_vocab_padding():
+    assert get_config("hymba-1.5b").padded_vocab() == 32016
+    assert get_config("whisper-medium").padded_vocab() == 51872
+    assert get_config("deepseek-67b").padded_vocab() == 102400  # already /16

@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret on CPU) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.diana_shift import diana_shift_update
+from repro.kernels.qsgd import TILE, qsgd_quantize
+from repro.kernels.randk import randk_compress, randk_decompress
+
+
+# ---------------------------------------------------------------------------
+# qsgd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_tiles", [1, 3, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("levels", [4, 8, 16])
+def test_qsgd_matches_ref(n_tiles, dtype, levels):
+    key = jax.random.key(n_tiles * levels)
+    x = (jax.random.normal(key, (n_tiles * TILE,)) * 3).astype(dtype)
+    u = jax.random.uniform(jax.random.key(7), x.shape)
+    got = qsgd_quantize(x, u, levels=levels)
+    want = ref.qsgd_quantize_ref(x, u, levels=levels, tile=TILE)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
+    )
+
+
+def test_qsgd_unbiased():
+    """E[Q(x)] = x conditional on tile scales (Assumption 1)."""
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (TILE,))
+    reps = 512
+    us = jax.random.uniform(jax.random.key(1), (reps, TILE))
+    outs = jax.vmap(lambda u: qsgd_quantize(x, u, levels=4))(us)
+    err = jnp.mean(outs, axis=0) - x
+    scale = float(jnp.max(jnp.abs(x)))
+    # MC std of the mean ~ scale/(4*sqrt(reps)); allow 5 sigma
+    assert float(jnp.max(jnp.abs(err))) < 5 * scale / (4 * np.sqrt(reps))
+
+
+def test_qsgd_wrapper_padding():
+    x = jax.random.normal(jax.random.key(2), (TILE + 13, 7))
+    out = ops.qsgd(x, jax.random.key(3))
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# randk circular row-block gather/scatter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_blocks,k_blocks", [(5, 1), (5, 2), (8, 8), (16, 3)])
+@pytest.mark.parametrize("d", [16, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_randk_roundtrip_all_starts(n_blocks, k_blocks, d, dtype):
+    br = 8
+    rows = (jax.random.normal(jax.random.key(0), (n_blocks * br, d)) * 2).astype(dtype)
+    for start in range(n_blocks):  # includes every wrap position
+        s = jnp.int32(start)
+        got_v = randk_compress(rows, s, k_blocks=k_blocks, block_rows=br)
+        want_v = ref.randk_compress_ref(rows, s, k_blocks=k_blocks, block_rows=br)
+        np.testing.assert_allclose(np.asarray(got_v, np.float32),
+                                   np.asarray(want_v, np.float32), rtol=1e-2)
+        got_d = randk_decompress(got_v, s, n_rows=n_blocks * br, block_rows=br)
+        want_d = ref.randk_decompress_ref(want_v, s, n_rows=n_blocks * br,
+                                          block_rows=br)
+        np.testing.assert_allclose(np.asarray(got_d, np.float32),
+                                   np.asarray(want_d, np.float32), rtol=1e-2)
+
+
+def test_randk_unbiased_over_starts():
+    """Mean over all start blocks reconstructs the original rows exactly."""
+    br, nb, d = 8, 6, 32
+    rows = jax.random.normal(jax.random.key(1), (nb * br, d))
+    acc = jnp.zeros_like(rows)
+    for start in range(nb):
+        v = randk_compress(rows, jnp.int32(start), k_blocks=2, block_rows=br)
+        acc = acc + randk_decompress(v, jnp.int32(start), n_rows=nb * br,
+                                     block_rows=br)
+    np.testing.assert_allclose(np.asarray(acc / nb), np.asarray(rows), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused diana shift update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 128 * 600, 128 * 600 + 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_diana_shift_matches_ref(n, dtype):
+    ks = jax.random.split(jax.random.key(4), 4)
+    h, qo, mh, qm = (jax.random.normal(k, (n,)).astype(dtype) for k in ks)
+    got = diana_shift_update(h, qo, mh, qm, alpha=0.11)
+    want = ref.diana_shift_update_ref(h, qo, mh, qm, 0.11)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   atol=5e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_diana_shift_fixed_point():
+    """At the DIANA fixed point (h == g, q == 0) the direction is H_t and
+    shifts do not move — the Theorem 2 stationarity on the kernel path."""
+    n = 256
+    h = jax.random.normal(jax.random.key(5), (n,))
+    zeros = jnp.zeros_like(h)
+    direction, h2, mh2 = ops.diana_shift(h, zeros, h, zeros, alpha=0.5)
+    np.testing.assert_allclose(np.asarray(direction), np.asarray(h), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mh2), np.asarray(h), atol=1e-6)

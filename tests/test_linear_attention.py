@@ -1,0 +1,102 @@
+"""Chunked linear attention vs the O(T) sequential oracle (RWKV6 + SSD)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_attention import (
+    LOG_DECAY_CLAMP,
+    chunked_linear_attention,
+    linear_attention_decode,
+    reference_linear_attention,
+)
+
+
+def _inputs(key, b, s, h, dk, dv, *, scalar_decay):
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (b, s, h, dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, dv)) * 0.5
+    shape = (b, s, h) if scalar_decay else (b, s, h, dk)
+    ld = -jnp.exp(jax.random.normal(ks[3], shape) * 0.5)  # in (-inf, 0)
+    return r, k, v, ld
+
+
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("scalar_decay", [True, False])
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (48, 16)])
+def test_chunked_matches_sequential(inclusive, scalar_decay, s, chunk):
+    b, h, dk, dv = 2, 3, 8, 8
+    r, k, v, ld = _inputs(jax.random.key(s), b, s, h, dk, dv,
+                          scalar_decay=scalar_decay)
+    bonus = None
+    if not inclusive:
+        bonus = jax.random.normal(jax.random.key(9), (h, dk)) * 0.3
+    got, gstate = chunked_linear_attention(
+        r, k, v, ld, bonus=bonus, inclusive=inclusive, chunk=chunk)
+    want, wstate = reference_linear_attention(
+        r, k, v, jnp.clip(ld, -LOG_DECAY_CLAMP, 0.0), bonus=bonus,
+        inclusive=inclusive)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(gstate), np.asarray(wstate),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_prefill_then_decode_matches_full(inclusive):
+    """State handoff: chunked prefill state + recurrent decode == full pass."""
+    b, s, h, dk, dv = 1, 32, 2, 8, 8
+    pre = 24  # prefill length (divisible by chunk); decode the rest
+    r, k, v, ld = _inputs(jax.random.key(3), b, s, h, dk, dv,
+                          scalar_decay=inclusive)
+    full, _ = chunked_linear_attention(
+        r, k, v, ld, inclusive=inclusive, chunk=8)
+    _, state = chunked_linear_attention(
+        r[:, :pre], k[:, :pre], v[:, :pre], ld[:, :pre],
+        inclusive=inclusive, chunk=8)
+    for t in range(pre, s):
+        out, state = linear_attention_decode(
+            r[:, t], k[:, t], v[:, t], ld[:, t], state, inclusive=inclusive)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, t]),
+                                   atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([16, 32, 64]),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**30),
+    inclusive=st.booleans(),
+)
+def test_property_chunk_invariance(s, chunk, seed, inclusive):
+    """Output must not depend on the chunk decomposition (system invariant:
+    chunking is an implementation detail, not semantics)."""
+    b, h, dk, dv = 1, 2, 4, 4
+    r, k, v, ld = _inputs(jax.random.key(seed), b, s, h, dk, dv,
+                          scalar_decay=False)
+    a, _ = chunked_linear_attention(r, k, v, ld, inclusive=inclusive, chunk=chunk)
+    bfull, _ = chunked_linear_attention(r, k, v, ld, inclusive=inclusive, chunk=s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bfull),
+                               atol=3e-4, rtol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_zero_decay_is_cumulative_sum(seed):
+    """With decay -> 0 (w=1) and inclusive scores, the state is a running
+    sum of k v^T — a closed form the implementation must reproduce."""
+    b, s, h, dk, dv = 1, 16, 1, 4, 4
+    ks = jax.random.split(jax.random.key(seed), 3)
+    r = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    ld = jnp.zeros((b, s, h, dk)) - 1e-9
+    got, _ = chunked_linear_attention(r, k, v, ld, inclusive=True, chunk=4)
+    # closed form: out_t = r_t . sum_{s<=t} k_s v_s^T
+    kv = jnp.einsum("bshk,bshv->bshkv", k, v)
+    run = jnp.cumsum(kv, axis=1)
+    want = jnp.einsum("bshk,bshkv->bshv", r, run)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

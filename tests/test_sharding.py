@@ -1,0 +1,92 @@
+"""Sharding rule units: divisibility fallbacks, cache specs, ZeRO-1 specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding
+
+
+def _leaf(path_names, shape):
+    """Build (path, leaf) the way tree_map_with_path would."""
+    path = tuple(jax.tree_util.DictKey(n) for n in path_names)
+    return path, jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def spec_of(names, shape, msize=16):
+    path, leaf = _leaf(names, shape)
+    return sharding._leaf_spec(path, leaf, msize)
+
+
+def test_column_parallel_divisible():
+    assert spec_of(["blocks", "mixer", "wq"], (24, 2048, 4096)) == \
+        P(None, None, "model")
+
+
+def test_column_parallel_indivisible_replicates():
+    assert spec_of(["blocks", "mixer", "wq"], (24, 2048, 100)) == \
+        P(None, None, None)
+
+
+def test_row_parallel_fallback_to_last_axis():
+    # hymba ln_attn (L, 25, 64): heads don't divide 16, head_dim does
+    assert spec_of(["blocks", "mixer", "ln_attn"], (32, 25, 64)) == \
+        P(None, None, "model")
+
+
+def test_row_parallel_primary_axis():
+    assert spec_of(["blocks", "mixer", "wo"], (24, 4096, 2048)) == \
+        P(None, "model", None)
+
+
+def test_vocab_parallel():
+    assert spec_of(["embed"], (100352, 2048)) == P("model", None)
+
+
+def test_norms_replicated():
+    assert spec_of(["blocks", "ln1", "scale"], (24, 2048)) == P(None, None)
+    assert spec_of(["blocks", "ffn", "router"], (24, 2048, 60)) == \
+        P(None, None, None)
+
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+        self.axis_names = tuple(sizes)
+
+
+def test_cache_specs_batch_sharded():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    cache = {"k": jax.ShapeDtypeStruct((40, 128, 32768, 8, 128), jnp.bfloat16)}
+    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, batch_size=128,
+                                 n_clients=16)
+    # batch over data; widest divisible axis (32768) over model
+    assert specs["k"] == P(None, ("data",), "model", None, None)
+
+
+def test_cache_specs_indivisible_widest_falls_through():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # whisper cross cache: 1500 not divisible -> next-widest divisible axis
+    # (head_dim 64) takes the model sharding
+    cache = {"k": jax.ShapeDtypeStruct((24, 128, 1500, 16, 64), jnp.bfloat16)}
+    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, batch_size=128,
+                                 n_clients=16)
+    assert specs["k"] == P(None, ("data",), None, None, "model")
+
+
+def test_cache_specs_small_batch_joint_shard():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # long_500k, B=1: widest axis sharded over (data, model) jointly
+    cache = {"k": jax.ShapeDtypeStruct((40, 1, 4096, 4, 128), jnp.bfloat16)}
+    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, batch_size=1,
+                                 n_clients=16)
+    assert specs["k"] == P(None, None, ("data", "model"), None, None)
+
+
+def test_zero1_never_shards_layer_axis():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    params = {"blocks": {"ln1": {"scale": jax.ShapeDtypeStruct(
+        (96, 8192), jnp.float32)}}}
+    specs = sharding.zero1_specs(params, ("data",), mesh=mesh)
+    # axis 0 is the scan axis: data must land on axis 1
+    assert specs["blocks"]["ln1"]["scale"] == P(None, "data")
