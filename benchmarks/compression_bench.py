@@ -1,0 +1,245 @@
+"""Compression hot-path benchmark: seed per-leaf path vs the backend layer.
+
+    PYTHONPATH=src python -m benchmarks.compression_bench [--quick] [--out F]
+
+Times one full M-client compression round (and the fused DIANA shift update)
+three ways at two scales:
+
+  seed       the seed repo's path: per-leaf Python loop under vmap, Rand-k
+             indices from `jax.random.choice(replace=False)` — a full
+             O(d log d) permutation sort per leaf per client per round.
+  reference  repro.compression.backend, pure-jnp: ravel the client pytree
+             once, sort-free circular-window Rand-k over the (M, D) buffer.
+  pallas     the same backend dispatching to the Pallas kernels (interpret
+             mode on CPU, Mosaic on TPU).
+
+Scales: "logreg" is the paper's convex-experiment shape (one dense weight
+vector, many clients); "transformer" is a tiny-LM pytree (the exp3 analog)
+with a dozen leaves per client, where the seed path pays one sort PER LEAF.
+
+Results land in BENCH_compression.json — the repo's canonical perf
+trajectory file (see ROADMAP.md Open items): every PR that touches the
+compression, kernels, or wire layers should re-run this and keep the
+speedup-vs-seed from regressing.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.backend import CompressionBackend
+from repro.compression.ops import QSGDQuantizer, RandK, tree_compress_per_leaf
+from repro.core.api import tree_axpy
+
+
+# ---------------------------------------------------------------------------
+# the seed path, reproduced verbatim as the baseline under test
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SeedRandK:
+    """The seed repo's Rand-k: uniform k-subset via a permutation sort."""
+
+    fraction: float = 0.02
+
+    def _k(self, size: int) -> int:
+        return max(1, min(size, int(self.fraction * size)))
+
+    def compress(self, key, x):
+        flat = jnp.reshape(x, (-1,))
+        d = flat.shape[0]
+        k = self._k(d)
+        idx = jax.random.choice(key, d, shape=(k,), replace=False)
+        vals = flat[idx] * (d / k)
+        return jnp.reshape(jnp.zeros_like(flat).at[idx].set(vals), x.shape)
+
+
+def seed_compress_clients(comp, key, tree):
+    """Seed `_compress_clients`: vmap over clients of the per-leaf loop
+    (`tree_compress_per_leaf`, the retained seed-era path)."""
+    m = jax.tree.leaves(tree)[0].shape[0]
+    keys = jax.random.split(key, m)
+    return jax.vmap(lambda k, g: tree_compress_per_leaf(comp, k, g))(keys, tree)
+
+
+def seed_diana_shift(h, qd, mh, qmean, alpha):
+    """Seed shift update: three separate tree_maps (five HBM passes)."""
+    direction = jax.tree.map(jnp.add, mh, qmean)
+    new_h = tree_axpy(alpha, qd, h)
+    new_mh = tree_axpy(alpha, qmean, mh)
+    return direction, new_h, new_mh
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+def logreg_tree(m: int, d: int, key):
+    """The paper's convex experiments: one dense weight vector per client."""
+    return {"w": jax.random.normal(key, (m, d), jnp.float32)}
+
+
+def transformer_tree(m: int, key, *, layers: int, d_model: int, vocab: int):
+    """Tiny-LM gradient pytree (the exp3/train_lm_diana_rr shape)."""
+    ks = iter(jax.random.split(key, 2 + 5 * layers))
+    tree = {"embed": jax.random.normal(next(ks), (m, vocab, d_model))}
+    for i in range(layers):
+        tree[f"l{i}"] = {
+            "qkv": jax.random.normal(next(ks), (m, d_model, 3 * d_model)),
+            "o": jax.random.normal(next(ks), (m, d_model, d_model)),
+            "up": jax.random.normal(next(ks), (m, d_model, 4 * d_model)),
+            "down": jax.random.normal(next(ks), (m, 4 * d_model, d_model)),
+            "ln": jax.random.normal(next(ks), (m, d_model)),
+        }
+    return tree
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# timing harness
+# ---------------------------------------------------------------------------
+
+def bench(fn, *args, reps: int = 20) -> float:
+    """Median wall-clock seconds of jit(fn) after warmup."""
+    jitted = jax.jit(fn)
+    out = jitted(*args)
+    jax.block_until_ready(out)  # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def fmt(sec: float) -> str:
+    return f"{sec * 1e3:9.3f} ms"
+
+
+def run_scale(name: str, tree, *, fraction: float, levels: int, reps: int):
+    key = jax.random.key(17)
+    d = tree_size(tree)
+    m = jax.tree.leaves(tree)[0].shape[0]
+    print(f"\n--- {name}: M={m} clients, d={d:,} params/client, "
+          f"k/d={fraction} " + "-" * max(4, 30 - len(name)))
+    out = {"clients": m, "d": d, "fraction": fraction}
+
+    seed_comp = SeedRandK(fraction=fraction)
+    comp = RandK(fraction=fraction)
+    backends = {
+        "reference": CompressionBackend("reference"),
+        "pallas": CompressionBackend("pallas"),
+    }
+
+    randk = {}
+    randk["seed"] = bench(
+        lambda k, t: seed_compress_clients(seed_comp, k, t), key, tree, reps=reps
+    )
+    for bname, be in backends.items():
+        randk[bname] = bench(
+            lambda k, t, be=be: be.compress_clients(comp, k, t), key, tree,
+            reps=reps,
+        )
+    for path, sec in randk.items():
+        extra = "" if path == "seed" else \
+            f"   ({randk['seed'] / sec:5.1f}x vs seed)"
+        print(f"randk  {path:10s} {fmt(sec)}{extra}")
+    out["randk"] = randk
+    out["randk_speedup_pallas_vs_seed"] = randk["seed"] / randk["pallas"]
+    out["randk_speedup_reference_vs_seed"] = randk["seed"] / randk["reference"]
+
+    qcomp = QSGDQuantizer(levels=levels)
+    qsgd = {}
+    qsgd["seed"] = bench(
+        lambda k, t: seed_compress_clients(qcomp, k, t), key, tree, reps=reps
+    )
+    for bname, be in backends.items():
+        qsgd[bname] = bench(
+            lambda k, t, be=be: be.compress_clients(qcomp, k, t), key, tree,
+            reps=reps,
+        )
+    for path, sec in qsgd.items():
+        extra = "" if path == "seed" else \
+            f"   ({qsgd['seed'] / sec:5.1f}x vs seed)"
+        print(f"qsgd   {path:10s} {fmt(sec)}{extra}")
+    out["qsgd"] = qsgd
+
+    # fused DIANA shift update on the same stacked tree
+    ks = jax.random.split(jax.random.key(23), 4)
+    h, qd, mh, qm = (jax.tree.map(
+        lambda l, kk=kk: jax.random.normal(kk, l.shape), tree) for kk in ks)
+    alpha = fraction  # 1/(1+omega) for Rand-k
+    shift = {}
+    shift["seed"] = bench(
+        lambda *t: seed_diana_shift(*t, alpha), h, qd, mh, qm, reps=reps
+    )
+    for bname, be in backends.items():
+        shift[bname] = bench(
+            lambda *t, be=be: be.tree_diana_shift(*t, alpha=alpha),
+            h, qd, mh, qm, reps=reps,
+        )
+    for path, sec in shift.items():
+        extra = "" if path == "seed" else \
+            f"   ({shift['seed'] / sec:5.1f}x vs seed)"
+        print(f"shift  {path:10s} {fmt(sec)}{extra}")
+    out["diana_shift"] = shift
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller shapes + fewer reps (CI smoke)")
+    ap.add_argument("--out", default="BENCH_compression.json")
+    args = ap.parse_args()
+
+    reps = 5 if args.quick else 10
+    key = jax.random.key(0)
+    results = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "quick": args.quick,
+            "pallas_mode": ("interpret" if jax.default_backend() == "cpu"
+                            else "mosaic"),
+        },
+        "scales": {},
+    }
+
+    t0 = time.time()
+    d = 20_000 if args.quick else 120_000
+    m = 8 if args.quick else 32
+    results["scales"]["logreg"] = run_scale(
+        "logreg", logreg_tree(m, d, key), fraction=0.02, levels=8, reps=reps
+    )
+
+    tcfg = dict(layers=2, d_model=128, vocab=2048) if args.quick else \
+        dict(layers=4, d_model=256, vocab=8192)
+    results["scales"]["transformer"] = run_scale(
+        "transformer", transformer_tree(8, key, **tcfg),
+        fraction=0.05, levels=8, reps=max(3, reps // 2),
+    )
+
+    sp = results["scales"]["logreg"]["randk_speedup_pallas_vs_seed"]
+    results["meta"]["elapsed_s"] = round(time.time() - t0, 1)
+    ok = sp >= 2.0
+    print(f"\nlogreg randk speedup (pallas backend vs seed): {sp:.1f}x "
+          f"{'(>= 2x target met)' if ok else '(below 2x target!)'}")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out} in {results['meta']['elapsed_s']}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,10 @@ Sections:
   [exp3]    Sec. 3.2 analog: the same methods on a neural net (tiny LM)
   [bits]    uplink bits-to-accuracy accounting (Fig. 1 right columns)
   [omega]   compressor variance table (Assumption 1 constants)
-  [kernels] Pallas kernel parity vs jnp oracles
+  [kernels] Pallas kernel parity vs jnp oracles (smoke; the full parity
+            matrix lives in tests/test_kernels.py, and the kernel/backend
+            TIMING trajectory is benchmarks/compression_bench.py ->
+            BENCH_compression.json — the canonical perf file for this repo)
   [roofline] §Roofline table from results/dryrun_single.jsonl (if present)
 """
 from __future__ import annotations
@@ -73,7 +76,8 @@ def main() -> None:
         print(f"{type(comp).__name__:22s} omega(d={d}) = {comp.omega(d):8.2f}  "
               f"bits/coord = {bits/d:6.2f} (vs 32 dense)")
 
-    section("kernels: Pallas vs jnp oracle parity")
+    section("kernels: Pallas vs jnp oracle parity "
+            "(timings: compression_bench.py -> BENCH_compression.json)")
     from repro.kernels import ops, ref
     key = jax.random.key(0)
     x = jax.random.normal(key, (8192,))

@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.dist import CompressedAggregation
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
+from repro.launch import compat
 from repro.launch import steps
 from repro.launch.mesh import make_test_mesh, num_clients
 from repro.models.config import ArchConfig
@@ -72,7 +73,7 @@ def main():
         num_batches=n_batches, num_clients=m, seed=0)
     sampler = ReshuffleSampler(m, n_batches, mode="rr", seed=1)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = jax.device_put(
             steps.init_train_state(jax.random.key(0), cfg, agg, m), shardings)
         key = jax.random.key(1)

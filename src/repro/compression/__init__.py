@@ -4,9 +4,16 @@ Every operator Q satisfies  E[Q(x)] = x  and  E||Q(x) - x||^2 <= omega * ||x||^2
 for a known omega (except TopK, which is *biased* and included only as a
 contrast baseline — the paper's theory does not cover it).
 
-Operators act on flat vectors; `tree_compress` lifts them to pytrees
-(per-leaf compression with split PRNG keys, per-leaf omega bookkeeping).
+Operators act on flat vectors; `tree_compress` lifts them to pytrees by
+raveling the whole tree into ONE flat buffer (single operator call). The
+`backend` module dispatches every compress / decompress / shift-update to
+either the pure-jnp reference or the Pallas kernels (DESIGN.md §3.5).
 """
+from repro.compression.backend import (
+    BACKENDS,
+    CompressionBackend,
+    get_backend,
+)
 from repro.compression.ops import (
     Compressor,
     Identity,
@@ -15,18 +22,25 @@ from repro.compression.ops import (
     QSGDQuantizer,
     NaturalCompression,
     tree_compress,
+    tree_compress_per_leaf,
     tree_compression_bits,
+    tree_ravel,
     get_compressor,
 )
 
 __all__ = [
+    "BACKENDS",
+    "CompressionBackend",
     "Compressor",
     "Identity",
     "RandK",
     "TopK",
     "QSGDQuantizer",
     "NaturalCompression",
+    "get_backend",
     "tree_compress",
+    "tree_compress_per_leaf",
     "tree_compression_bits",
+    "tree_ravel",
     "get_compressor",
 ]

@@ -1,0 +1,231 @@
+"""Compression backend: one dispatch layer for every compress / decompress /
+shift-update in the repo (DESIGN.md §3.5).
+
+Two backends implement the same primitives:
+
+``reference``
+    Pure-jnp implementations (`repro.kernels.ref` plus the vectorized mask
+    formula). The semantics oracle — every pallas result must match it to
+    atol 1e-6 (f32), enforced by tests/test_kernels.py.
+
+``pallas``
+    The Pallas kernels in `repro.kernels`: Mosaic on TPU, interpret mode on
+    CPU. One kernel launch covers the whole flat buffer — the simulator
+    ravels each client's gradient pytree once and compresses all M clients
+    in a single call, and the pod wire's circular row-block gather/scatter
+    runs as `k_blocks` VMEM copies instead of a `jnp.roll` of the full leaf.
+
+Consumers:
+
+- `repro.core.algorithms` routes `_compress_clients` and the DIANA shift
+  updates through `compress_clients` / `tree_diana_shift`;
+- `repro.core.dist` routes the shared wire through `wire_compress` /
+  `wire_decompress`;
+- `benchmarks/compression_bench.py` times both backends against the seed
+  per-leaf `jax.random.choice` path and writes BENCH_compression.json.
+
+Backend selection: pass a name explicitly, or set REPRO_COMPRESSION_BACKEND
+(default "pallas" — on CPU the kernels run in interpret mode, which lowers
+to the same XLA ops as the reference but keeps the TPU path exercised).
+
+Operator semantics on the batched paths (all Assumption-1 compliant):
+
+- Rand-k is the circular-window sampler over the raveled tree (marginal
+  inclusion probability exactly k/d -> unbiased, omega = d/k - 1 exact).
+- QSGD is the TPU-native blockwise variant: per-1024-tile max-abs scale
+  instead of the global L2 norm (kernels/qsgd.py). Unbiased conditional on
+  the tile scales. The leaf-level `QSGDQuantizer.compress` API keeps the
+  paper-exact global-norm semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.diana_shift import LANES
+from repro.kernels.qsgd import TILE, qsgd_quantize
+from repro.kernels.randk import randk_compress, randk_decompress, randk_mask
+from repro.kernels.ops import diana_shift as _pallas_diana_shift
+
+BACKENDS = ("reference", "pallas")
+_ENV_VAR = "REPRO_COMPRESSION_BACKEND"
+
+# flat buffers are padded to the coarsest alignment any kernel needs so one
+# padded layout serves qsgd (TILE=1024) and the mask kernel (8*128=1024)
+_ALIGN = TILE
+
+
+def tree_ravel_clients(tree):
+    """Ravel a client-stacked pytree (leaves (M, *s)) into one (M, D) buffer.
+
+    Returns (mat, unravel). unravel(mat) restores per-leaf shapes/dtypes.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    m = leaves[0].shape[0]
+    sizes = [int(np.prod(leaf.shape[1:])) for leaf in leaves]
+    shapes = [leaf.shape for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+    offsets = np.cumsum([0] + sizes)
+    mat = jnp.concatenate(
+        [jnp.reshape(leaf, (m, -1)).astype(jnp.float32) for leaf in leaves],
+        axis=1,
+    )
+
+    def unravel(out):
+        parts = [
+            jnp.reshape(out[:, offsets[i]:offsets[i + 1]], shapes[i]).astype(dtypes[i])
+            for i in range(len(sizes))
+        ]
+        return jax.tree.unflatten(treedef, parts)
+
+    return mat, unravel
+
+
+def _pad_cols(mat: jax.Array, multiple: int) -> jax.Array:
+    pad = (-mat.shape[1]) % multiple
+    if pad:
+        mat = jnp.pad(mat, ((0, 0), (0, pad)))
+    return mat
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionBackend:
+    """Static dispatch between the jnp reference and the Pallas kernels."""
+
+    name: str = "pallas"
+    interpret: bool | None = None  # None -> auto (interpret on CPU)
+
+    def __post_init__(self):
+        if self.name not in BACKENDS:
+            raise ValueError(f"unknown backend {self.name!r}; options: {BACKENDS}")
+
+    @property
+    def is_pallas(self) -> bool:
+        return self.name == "pallas"
+
+    # -- flat batched primitives ----------------------------------------------
+
+    def randk_dense(self, mat: jax.Array, starts: jax.Array, *, d: int,
+                    k: int) -> jax.Array:
+        """Dense Q(x) for M clients: circular window mask + (d/k) scale.
+
+        mat: (M, Dp) with Dp 1024-aligned and d <= Dp the real flat length.
+        """
+        if self.is_pallas:
+            return randk_mask(mat, starts, d=d, k=k, interpret=self.interpret)
+        return ref.randk_mask_ref(mat, starts, d=d, k=k)
+
+    def qsgd_dense(self, mat: jax.Array, u: jax.Array, *, levels: int) -> jax.Array:
+        """Blockwise-QSGD quantize->dequantize; mat (M, Dp), Dp % TILE == 0."""
+        m, dp = mat.shape
+        flat, uf = mat.reshape(m * dp), u.reshape(m * dp)
+        if self.is_pallas:
+            out = qsgd_quantize(flat, uf, levels=levels, interpret=self.interpret)
+        else:
+            out = ref.qsgd_quantize_ref(flat, uf, levels=levels, tile=TILE)
+        return out.reshape(m, dp)
+
+    def diana_shift_flat(self, h, q_own, mh, q_mean, *, alpha: float):
+        """Fused DIANA update on flat (N,) buffers -> (direction, h', H')."""
+        if self.is_pallas:
+            return _pallas_diana_shift(h, q_own, mh, q_mean, alpha=alpha)
+        return ref.diana_shift_update_ref(h, q_own, mh, q_mean, alpha)
+
+    # -- pytree entry points (the simulator hot path) -------------------------
+
+    def compress_clients(self, comp, key: jax.Array, tree):
+        """Q(g_m) for all M clients of a client-stacked pytree in ONE launch.
+
+        Ravel once -> compress once -> unravel: the per-leaf Python loop and
+        the per-leaf PRNG sorts of the seed path collapse into a single flat
+        buffer operation over the (M, D) matrix of client gradients.
+        """
+        from repro.compression.ops import Identity, QSGDQuantizer, RandK
+
+        if isinstance(comp, Identity):
+            return tree
+        m = jax.tree.leaves(tree)[0].shape[0]
+        mat, unravel = tree_ravel_clients(tree)
+        d = mat.shape[1]
+        if isinstance(comp, RandK):
+            k = comp._k(d)
+            starts = jax.random.randint(key, (m,), 0, d)  # independent/client
+            dense = self.randk_dense(_pad_cols(mat, _ALIGN), starts, d=d, k=k)
+            return unravel(dense[:, :d])
+        if isinstance(comp, QSGDQuantizer):
+            padded = _pad_cols(mat, _ALIGN)
+            u = jax.random.uniform(key, padded.shape)
+            dense = self.qsgd_dense(padded, u, levels=comp.levels)
+            return unravel(dense[:, :d])
+        # generic operators (TopK, NaturalCompression, user-defined): still a
+        # single ravel; the operator itself runs once per client under vmap.
+        keys = jax.random.split(key, m)
+        dense = jax.vmap(comp.compress)(keys, mat)
+        return unravel(dense)
+
+    def tree_diana_shift(self, h_tree, qo_tree, mh_tree, qm_tree, *,
+                         alpha: float):
+        """Fused DIANA update over whole pytrees (same structure/shapes).
+
+        Returns (direction_tree, h_tree', mh_tree'). On the pallas backend
+        this is ONE kernel launch over the raveled buffer — each input reads
+        HBM once and the three outputs write in the same pass, vs five
+        param-sized round-trips for three separate tree_maps. The reference
+        backend stays per-leaf (no ravel copies) and is the semantics oracle.
+        """
+        if self.is_pallas:
+            from repro.compression.ops import tree_ravel
+
+            h, unravel = tree_ravel(h_tree)
+            qo, _ = tree_ravel(qo_tree)
+            mh, _ = tree_ravel(mh_tree)
+            qm, _ = tree_ravel(qm_tree)
+            direction, h_new, mh_new = self.diana_shift_flat(h, qo, mh, qm,
+                                                             alpha=alpha)
+            return unravel(direction), unravel(h_new), unravel(mh_new)
+        h_leaves, treedef = jax.tree.flatten(h_tree)
+        trips = [
+            ref.diana_shift_update_ref(a, b, c, d, alpha)
+            for a, b, c, d in zip(h_leaves, jax.tree.leaves(qo_tree),
+                                  jax.tree.leaves(mh_tree),
+                                  jax.tree.leaves(qm_tree))
+        ]
+        return tuple(
+            jax.tree.unflatten(treedef, [t[i] for t in trips]) for i in range(3)
+        )
+
+    # -- wire primitives (the pod shared-seed Rand-block collective) ----------
+
+    def wire_compress(self, rows: jax.Array, start_block: jax.Array, *,
+                      k_blocks: int, block_rows: int) -> jax.Array:
+        """(N, D) rows -> (k_blocks*block_rows, D) circular gather + scale."""
+        if self.is_pallas:
+            return randk_compress(rows, start_block, k_blocks=k_blocks,
+                                  block_rows=block_rows,
+                                  interpret=self.interpret)
+        return ref.randk_compress_ref(rows, start_block, k_blocks=k_blocks,
+                                      block_rows=block_rows)
+
+    def wire_decompress(self, vals: jax.Array, start_block: jax.Array, *,
+                        n_rows: int, block_rows: int) -> jax.Array:
+        """(K, D) vals -> (n_rows, D) zero-padded circular scatter."""
+        if self.is_pallas:
+            return randk_decompress(vals, start_block, n_rows=n_rows,
+                                    block_rows=block_rows,
+                                    interpret=self.interpret)
+        return ref.randk_decompress_ref(vals, start_block, n_rows=n_rows,
+                                        block_rows=block_rows)
+
+
+def get_backend(name: str | CompressionBackend | None = None) -> CompressionBackend:
+    """Resolve a backend: explicit arg > $REPRO_COMPRESSION_BACKEND > pallas."""
+    if isinstance(name, CompressionBackend):
+        return name
+    if name is None:
+        name = os.environ.get(_ENV_VAR, "pallas")
+    return CompressionBackend(name=name)

@@ -59,11 +59,16 @@ class Identity:
 
 @dataclasses.dataclass(frozen=True)
 class RandK:
-    """Rand-k sparsification (Beznosikov et al., 2020).
+    """Rand-k sparsification (Beznosikov et al., 2020), Rand-block sampler.
 
-    Q(x) = (d/k) * sum_{i in S} x_i e_i with S uniform over k-subsets.
-    Unbiased; omega = d/k - 1 (exact). The paper's canonical operator
-    (k/d ~ 0.02 in the logreg experiments, 0.05 for ResNet).
+    Q(x) = (d/k) * sum_{i in S} x_i e_i with S a circular window of k
+    coordinates starting at a uniform offset (DESIGN.md §3.2). Every
+    coordinate has marginal inclusion probability exactly k/d, so Q is
+    unbiased with omega = d/k - 1 EXACT — Assumption 1 only needs the
+    marginals, the paper's constants are unchanged. Unlike the uniform
+    k-subset sampler (`jax.random.choice(replace=False)`, an O(d log d)
+    permutation sort per call), the window is O(d) and sort-free, which is
+    what makes the simulator hot path kernel-friendly.
 
     `fraction` sets k = max(1, floor(fraction * d)) when `k` is None.
     """
@@ -71,24 +76,33 @@ class RandK:
     k: int | None = None
     fraction: float | None = 0.02
 
+    def __post_init__(self):
+        if self.k is None and self.fraction is None:
+            raise ValueError(
+                "RandK needs either k or fraction; both are None. "
+                "Pass k=<int> or fraction=<float in (0, 1]>."
+            )
+
     def _k(self, size: int) -> int:
         if self.k is not None:
             return max(1, min(self.k, size))
         return max(1, min(size, int(self.fraction * size)))
 
     def indices(self, key, size: int) -> jax.Array:
+        """The k selected coordinates: a circular window at a random start."""
         k = self._k(size)
-        # uniform k-subset without replacement
-        return jax.random.choice(key, size, shape=(k,), replace=False)
+        start = jax.random.randint(key, (), 0, size)
+        return (start + jnp.arange(k)) % size
 
     def compress(self, key, x):
         flat = _flatten(x)
         d = flat.shape[0]
         k = self._k(d)
-        idx = self.indices(key, d)
-        vals = flat[idx] * (d / k)
-        out = jnp.zeros_like(flat).at[idx].set(vals)
-        return jnp.reshape(out, x.shape)
+        start = jax.random.randint(key, (), 0, d)
+        # roll the window to the front, mask, roll back: O(d), no gather/sort
+        shifted = jnp.roll(flat, -start)
+        kept = jnp.where(jnp.arange(d) < k, shifted * (d / k), 0.0)
+        return jnp.reshape(jnp.roll(kept, start), x.shape).astype(x.dtype)
 
     def omega(self, size):
         return size / self._k(size) - 1.0
@@ -106,6 +120,13 @@ class TopK:
 
     k: int | None = None
     fraction: float | None = 0.02
+
+    def __post_init__(self):
+        if self.k is None and self.fraction is None:
+            raise ValueError(
+                "TopK needs either k or fraction; both are None. "
+                "Pass k=<int> or fraction=<float in (0, 1]>."
+            )
 
     def _k(self, size: int) -> int:
         if self.k is not None:
@@ -188,8 +209,49 @@ class NaturalCompression:
         return 9 * size
 
 
+def tree_ravel(tree):
+    """Concatenate all leaves into one flat vector.
+
+    Returns (flat, unravel) where unravel(flat) rebuilds the pytree. A
+    deterministic, jit/vmap-friendly subset of `jax.flatten_util.ravel_pytree`
+    (no dtype promotion: leaves keep their dtypes on the way back).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [int(np.prod(leaf.shape)) for leaf in leaves]
+    shapes = [leaf.shape for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+    offsets = np.cumsum([0] + sizes)
+    flat = jnp.concatenate([jnp.reshape(leaf, (-1,)).astype(jnp.float32)
+                            for leaf in leaves]) if leaves else jnp.zeros((0,))
+
+    def unravel(vec):
+        parts = [
+            jnp.reshape(vec[offsets[i]:offsets[i + 1]], shapes[i]).astype(dtypes[i])
+            for i in range(len(sizes))
+        ]
+        return jax.tree.unflatten(treedef, parts)
+
+    return flat, unravel
+
+
 def tree_compress(compressor, key: jax.Array, tree):
-    """Apply `compressor` leaf-wise with independent split keys."""
+    """Compress a whole pytree in ONE flat-buffer operator call.
+
+    Ravel once -> compress once -> unravel (DESIGN.md §3.5): the compressor
+    sees the concatenated vector, so a single kernel launch covers every leaf
+    instead of one launch (plus one PRNG sort, for Rand-k) per leaf. Q stays
+    unbiased leaf-wise because it is unbiased coordinate-wise. For operators
+    with a global statistic (QSGD's L2 norm) the statistic now spans the tree
+    — still Assumption-1 compliant with omega evaluated at the total d.
+    """
+    flat, unravel = tree_ravel(tree)
+    return unravel(compressor.compress(key, flat))
+
+
+def tree_compress_per_leaf(compressor, key: jax.Array, tree):
+    """Seed-era per-leaf path (independent key per leaf). Kept as the
+    baseline for benchmarks/compression_bench.py and for callers that need
+    per-leaf operator statistics."""
     leaves, treedef = jax.tree.flatten(tree)
     keys = jax.random.split(key, len(leaves))
     out = [compressor.compress(k, leaf) for k, leaf in zip(keys, leaves)]

@@ -33,6 +33,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compression.backend import CompressionBackend, get_backend
 from repro.compression.ops import Identity, tree_compression_bits
 from repro.core.api import (
     FedState,
@@ -100,21 +101,15 @@ def init_algorithm(spec: AlgoSpec, params, m: int, n: int) -> FedState:
     return init_state(params, shifts=shifts, server_h=server_h)
 
 
-def _compress_clients(comp, key, grads_stacked):
-    """vmap a per-client compression over the leading client axis.
+def _compress_clients(comp, key, grads_stacked, backend: CompressionBackend):
+    """Compress every client's gradient pytree in one backend launch.
 
-    Each client uses an independent key (the paper's Q are independent across
-    workers — this is what makes the 1/M variance factor appear).
+    Each client uses independent randomness (the paper's Q are independent
+    across workers — this is what makes the 1/M variance factor appear); the
+    backend ravels the whole (M, D) client matrix once and runs a single
+    flat-buffer kernel instead of a per-leaf loop under vmap.
     """
-    m = jax.tree.leaves(grads_stacked)[0].shape[0]
-    keys = jax.random.split(key, m)
-
-    def one(k, g):
-        from repro.compression.ops import tree_compress
-
-        return tree_compress(comp, k, g)
-
-    return jax.vmap(one)(keys, grads_stacked)
+    return backend.compress_clients(comp, key, grads_stacked)
 
 
 def _sample_round_indices(spec: AlgoSpec, key, m: int, n: int) -> jax.Array:
@@ -129,7 +124,8 @@ def _sample_round_indices(spec: AlgoSpec, key, m: int, n: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
-                    alpha: float, state: FedState, data, key) -> FedState:
+                    alpha: float, backend: CompressionBackend,
+                    state: FedState, data, key) -> FedState:
     m, n = num_clients(data), num_batches(data)
     k_idx, k_comp = jax.random.split(key)
     idx = _sample_round_indices(spec, k_idx, m, n)  # (M, n)
@@ -143,28 +139,32 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
         g = clients_grad(loss_fn, params, batches)  # leaves (M, ...)
 
         if spec.shift_mode == "none":
-            ghat = _compress_clients(comp, k, g)
+            ghat = _compress_clients(comp, k, g, backend)
             new_shifts = shifts
         elif spec.shift_mode == "ef":
             # error feedback: p_m = gamma*g_m + e_m; send C(p_m); keep the
             # compression residual as next round's memory. The common
             # `params - gamma*direction` update divides gamma back out.
             p_t = jax.tree.map(lambda gi, e: gamma * gi + e, g, shifts)
-            qd = _compress_clients(comp, k, p_t)
+            qd = _compress_clients(comp, k, p_t, backend)
             new_shifts = jax.tree.map(jnp.subtract, p_t, qd)
             ghat = jax.tree.map(lambda q: q / gamma, qd)
         elif spec.shift_mode == "single":
             delta = tree_sub(g, shifts)
-            qd = _compress_clients(comp, k, delta)
-            ghat = jax.tree.map(jnp.add, shifts, qd)
-            new_shifts = jax.tree.map(lambda h, q: h + alpha * q, shifts, qd)
+            qd = _compress_clients(comp, k, delta, backend)
+            # fused kernel: ghat = h + Q, h' = h + alpha*Q in one pass
+            ghat, new_shifts, _ = backend.tree_diana_shift(
+                shifts, qd, shifts, qd, alpha=alpha
+            )
         elif spec.shift_mode == "per_slot":
             h_i = jax.tree.map(lambda s: s[arange_m, col], shifts)
             delta = tree_sub(g, h_i)
-            qd = _compress_clients(comp, k, delta)
-            ghat = jax.tree.map(jnp.add, h_i, qd)
+            qd = _compress_clients(comp, k, delta, backend)
+            ghat, h_i_new, _ = backend.tree_diana_shift(
+                h_i, qd, h_i, qd, alpha=alpha
+            )
             new_shifts = jax.tree.map(
-                lambda s, q: s.at[arange_m, col].add(alpha * q), shifts, qd
+                lambda s, hn: s.at[arange_m, col].set(hn), shifts, h_i_new
             )
         else:
             raise ValueError(spec.shift_mode)
@@ -190,7 +190,8 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
 # ---------------------------------------------------------------------------
 
 def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float,
-                 alpha: float, state: FedState, data, key) -> FedState:
+                 alpha: float, backend: CompressionBackend,
+                 state: FedState, data, key) -> FedState:
     m, n = num_clients(data), num_batches(data)
     k_idx, k_comp = jax.random.split(key)
     idx = _sample_round_indices(spec, k_idx, m, n)  # (M, n)
@@ -209,17 +210,21 @@ def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float
     g = jax.tree.map(lambda p, xn: (p - xn) / (gamma * n), state.params, xns)
 
     if spec.shift_mode == "none":
-        ghat = _compress_clients(comp, k_comp, g)
+        ghat = _compress_clients(comp, k_comp, g, backend)
         shifts, server_h = state.shifts, state.server_h
         direction = tree_mean_clients(ghat)
     elif spec.shift_mode == "single":
         delta = tree_sub(g, state.shifts)
-        qd = _compress_clients(comp, k_comp, delta)
+        qd = _compress_clients(comp, k_comp, delta, backend)
         mean_qd = tree_mean_clients(qd)
         # \hat g_t = h_t + (1/M) sum_m Q(g_{t,m} - h_{t,m})   (Alg. 5 line 11)
-        direction = jax.tree.map(jnp.add, state.server_h, mean_qd)
+        # fused: direction = H + mean_Q and H' = H + alpha*mean_Q in one pass
+        direction, _, server_h = backend.tree_diana_shift(
+            state.server_h, mean_qd, state.server_h, mean_qd, alpha=alpha
+        )
+        # the (M, d) client shifts only need the axpy — a fused call here
+        # would write two discarded M-times-param-sized outputs
         shifts = jax.tree.map(lambda h, q: h + alpha * q, state.shifts, qd)
-        server_h = jax.tree.map(lambda h, q: h + alpha * q, state.server_h, mean_qd)
     else:
         raise ValueError(spec.shift_mode)
 
@@ -240,13 +245,19 @@ def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float
 # ---------------------------------------------------------------------------
 
 def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
-                  eta: float | None = None, alpha: float | None = None):
+                  eta: float | None = None, alpha: float | None = None,
+                  backend: str | CompressionBackend | None = None):
     """Return (spec, epoch_fn) for algorithm `name`.
 
     epoch_fn(state, data, key) -> FedState runs one full data epoch
     (n communication rounds for non-local methods, 1 for local methods).
+
+    `backend` selects the compression execution path ("reference" |
+    "pallas"); default follows $REPRO_COMPRESSION_BACKEND, then "pallas"
+    (interpret mode on CPU, Mosaic on TPU) — see repro.compression.backend.
     """
     spec = ALGORITHMS[name]
+    be = get_backend(backend)
     comp = compressor
     if comp is None or not spec.default_compressed and compressor is None:
         comp = Identity()
@@ -262,10 +273,12 @@ def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
 
     if spec.family == "nonlocal":
         def epoch(state, data, key):
-            return _nonlocal_epoch(spec, loss_fn, comp, gamma, alpha, state, data, key)
+            return _nonlocal_epoch(spec, loss_fn, comp, gamma, alpha, be,
+                                   state, data, key)
     else:
         def epoch(state, data, key):
-            return _local_epoch(spec, loss_fn, comp, gamma, eta, alpha, state, data, key)
+            return _local_epoch(spec, loss_fn, comp, gamma, eta, alpha, be,
+                                state, data, key)
 
     return spec, epoch
 

@@ -15,15 +15,18 @@ This is the paper's communication layer rethought for ICI collectives
     folded with the model-axis index so every model shard picks its own
     block). Then only the k selected values are psum'd: collective bytes drop
     by d/k (~50x at the paper's k/d≈0.02). Coordinates are a contiguous
-    random block ("Rand-block"): uniform marginal inclusion probability k/d
-    gives exactly the Rand-k variance bound omega = d/k - 1 (the second
-    moment only needs marginals — see DESIGN.md), while replacing the gather/
-    scatter with dynamic_slice / dynamic_update_slice, which is the memory-
-    friendly access pattern on TPU. Because coordinates are shared,
-    mean_m Q(d_m) == Q(mean_m d_m): the omega/M factor of the paper becomes
-    omega applied to the already-averaged vector — still Assumption-1
-    compliant per round, and with DIANA shifts the compressed residual
-    d_m -> 0 so the fixed point is unchanged (Theorem 2 logic carries over).
+    random block of whole 8-row groups ("Rand-block", DESIGN.md §3.2):
+    uniform marginal inclusion probability k/d gives exactly the Rand-k
+    variance bound omega = d/k - 1 (the second moment only needs marginals),
+    while the gather/scatter runs through the Pallas circular row-block
+    kernels (`repro.kernels.randk`) dispatched by the compression backend
+    (DESIGN.md §3.5) — k_blocks sequential VMEM copies driven by one
+    prefetched scalar, instead of a `jnp.roll` of the full leaf. Because
+    coordinates are shared, mean_m Q(d_m) == Q(mean_m d_m): the omega/M
+    factor of the paper becomes omega applied to the already-averaged vector
+    — still Assumption-1 compliant per round, and with DIANA shifts the
+    compressed residual d_m -> 0 so the fixed point is unchanged (Theorem 2
+    logic carries over).
 
 Aggregation methods (paper Secs. 2.1-2.2, production variants):
 
@@ -49,6 +52,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compression.backend import get_backend
+from repro.kernels.randk import BLOCK_ROWS
+
 
 class DianaState(NamedTuple):
     """Per-device compression state (local blocks of param-shaped trees)."""
@@ -67,6 +73,7 @@ class CompressedAggregation:
     alpha: float | None = None  # shift stepsize; None -> 1/(1+omega) (Thm 2)
     shift_dtype: Any = jnp.bfloat16
     client_axes: tuple[str, ...] = ("data",)
+    backend: str | None = None  # 'reference' | 'pallas' | None (env/default)
 
     # -- state ---------------------------------------------------------------
 
@@ -126,49 +133,75 @@ class CompressedAggregation:
         return self._aggregate_independent(grads, state, key)
 
     # shared-seed Rand-block: sparse collectives -------------------------------
+    #
+    # The circular window is block-granular (whole BLOCK_ROWS=8 row groups)
+    # so the gather/scatter maps onto the Pallas kernels' sublane-aligned
+    # VMEM copies. Rows are zero-padded up to a block multiple; padding rows
+    # travel (zeros) but never reach real coordinates on reconstruction.
+    # Marginal inclusion probability is k_blocks/n_blocks for every real row
+    # -> unbiased with the same omega formula (DESIGN.md §3.2).
+
+    def _pad_rows(self, rows):
+        pad = (-rows.shape[0]) % BLOCK_ROWS
+        if pad:
+            rows = jnp.pad(rows, ((0, pad), (0, 0)))
+        return rows
+
+    def _wire_geometry(self, n_rows_padded: int) -> tuple[int, int]:
+        nb = n_rows_padded // BLOCK_ROWS
+        return nb, max(1, int(self.fraction * nb))
 
     def _compress_shared_leaf(self, key, delta):
-        """Returns (start, own_rows, mean_rows, k_rows) for one leaf."""
-        rows = self._row_view(delta)
-        n = rows.shape[0]
-        k = self._k(n)
-        start = jax.random.randint(key, (), 0, n)
-        # circular row block: roll so the block begins at row 0, then a
-        # static slice (the roll axis is never sharded — rows wrap locally).
-        vals = jnp.roll(rows, -start, axis=0)[:k] * (n / k)
+        """Returns (start_block, own_vals, mean_vals) for one leaf."""
+        be = get_backend(self.backend)
+        rows = self._pad_rows(self._row_view(delta))
+        nb, kb = self._wire_geometry(rows.shape[0])
+        start_block = jax.random.randint(key, (), 0, nb)
+        vals = be.wire_compress(rows, start_block, k_blocks=kb,
+                                block_rows=BLOCK_ROWS)
         mean_vals = lax.pmean(vals, self.client_axes)  # the sparse collective
-        return start, vals, mean_vals, k
+        return start_block, vals, mean_vals
 
-    def _scatter_block(self, template, start, vals):
-        rows = jnp.zeros(self._row_view(template).shape, vals.dtype)
-        rows = lax.dynamic_update_slice(rows, vals, (0, 0))
-        return jnp.reshape(jnp.roll(rows, start, axis=0), template.shape)
+    def _scatter_block(self, template, start_block, vals):
+        be = get_backend(self.backend)
+        shape = self._row_view(template).shape
+        n_padded = shape[0] + (-shape[0]) % BLOCK_ROWS
+        dense = be.wire_decompress(vals, start_block, n_rows=n_padded,
+                                   block_rows=BLOCK_ROWS)
+        return jnp.reshape(dense[:shape[0]], template.shape)
 
     def _aggregate_shared(self, grads, state, key):
         leaves, treedef = jax.tree.flatten(grads)
         if self.method == "q":
             out = []
             for i, g in enumerate(leaves):
-                start, _, mean_vals, _ = self._compress_shared_leaf(
+                start, _, mean_vals = self._compress_shared_leaf(
                     self._leaf_key(key, i), g
                 )
                 out.append(self._scatter_block(g, start, mean_vals))
             return jax.tree.unflatten(treedef, out), state
 
-        # diana
+        # diana — the shift/direction arithmetic runs through the fused
+        # kernel (one pass over four inputs, three outputs) instead of five
+        # separate param-sized HBM round-trips.
+        be = get_backend(self.backend)
         h_leaves = jax.tree.leaves(state.shifts)
         mh_leaves = jax.tree.leaves(state.mean_shift)
         dirs, new_h, new_mh = [], [], []
         for i, (g, h, mh) in enumerate(zip(leaves, h_leaves, mh_leaves)):
             delta = g.astype(jnp.float32) - h.astype(jnp.float32)
-            start, own_vals, mean_vals, _ = self._compress_shared_leaf(
+            start, own_vals, mean_vals = self._compress_shared_leaf(
                 self._leaf_key(key, i), delta
             )
             q_mean = self._scatter_block(g, start, mean_vals)
-            direction = mh.astype(jnp.float32) + q_mean
             q_own = self._scatter_block(g, start, own_vals)
-            new_h.append((h.astype(jnp.float32) + self.shift_lr * q_own).astype(self.shift_dtype))
-            new_mh.append((mh.astype(jnp.float32) + self.shift_lr * q_mean).astype(self.shift_dtype))
+            direction, h_new, mh_new = be.diana_shift_flat(
+                h.astype(self.shift_dtype), q_own.astype(jnp.float32),
+                mh.astype(self.shift_dtype), q_mean.astype(jnp.float32),
+                alpha=self.shift_lr,
+            )
+            new_h.append(h_new)
+            new_mh.append(mh_new)
             dirs.append(direction.astype(g.dtype))
         new_state = DianaState(
             shifts=jax.tree.unflatten(treedef, new_h),
@@ -205,6 +238,7 @@ class CompressedAggregation:
                 out.append(lax.pmean(q, self.client_axes).astype(g.dtype))
             return jax.tree.unflatten(treedef, out), state
 
+        be = get_backend(self.backend)
         h_leaves = jax.tree.leaves(state.shifts)
         mh_leaves = jax.tree.leaves(state.mean_shift)
         dirs, new_h, new_mh = [], [], []
@@ -212,9 +246,13 @@ class CompressedAggregation:
             delta = g.astype(jnp.float32) - h.astype(jnp.float32)
             q_own = self._compress_independent_leaf(self._client_key(key, i), delta)
             q_mean = lax.pmean(q_own, self.client_axes)  # dense collective
-            dirs.append((mh.astype(jnp.float32) + q_mean).astype(g.dtype))
-            new_h.append((h.astype(jnp.float32) + self.shift_lr * q_own).astype(self.shift_dtype))
-            new_mh.append((mh.astype(jnp.float32) + self.shift_lr * q_mean).astype(self.shift_dtype))
+            direction, h_new, mh_new = be.diana_shift_flat(
+                h.astype(self.shift_dtype), q_own,
+                mh.astype(self.shift_dtype), q_mean, alpha=self.shift_lr,
+            )
+            dirs.append(direction.astype(g.dtype))
+            new_h.append(h_new)
+            new_mh.append(mh_new)
         new_state = DianaState(
             shifts=jax.tree.unflatten(treedef, new_h),
             mean_shift=jax.tree.unflatten(treedef, new_mh),

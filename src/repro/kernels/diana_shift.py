@@ -42,7 +42,8 @@ def diana_shift_update(h, q_own, mh, q_mean, *, alpha: float,
         interpret = jax.default_backend() == "cpu"
     n = h.shape[0]
     rows = n // LANES
-    br = min(_BLOCK, rows)
+    # single grid step in interpret mode (see kernels/qsgd.py note)
+    br = rows if interpret else min(_BLOCK, rows)
     grid = (pl.cdiv(rows, br),)
     spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
     view = lambda x: x.reshape(rows, LANES)

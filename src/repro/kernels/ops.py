@@ -48,27 +48,9 @@ def diana_shift(h, q_own, mh, q_mean, *, alpha: float):
     return (d[:n].reshape(shape), hn[:n].reshape(shape), mhn[:n].reshape(shape))
 
 
-def randk_rows(rows: jax.Array, start_block: jax.Array, *, fraction: float,
-               block_rows: int = BLOCK_ROWS):
-    """Circular block Rand-k of a (N, D) row view.
+# NOTE: the circular-block wire path (pad to BLOCK_ROWS, k_blocks geometry,
+# compress -> pmean -> decompress) lives in repro.core.dist, dispatched per
+# backend by repro.compression.backend.wire_compress/wire_decompress.
 
-    Returns (values (K, D), reconstruct_fn) where reconstruct_fn scatters the
-    (possibly all-reduced) values back to a dense (N, D) canvas.
-    """
-    padded, n = _pad_to(rows, block_rows)
-    np_ = padded.shape[0]
-    nb = np_ // block_rows
-    k_blocks = max(1, int(fraction * nb))
-    vals = randk_compress(padded, start_block, k_blocks=k_blocks,
-                          block_rows=block_rows)
-
-    def reconstruct(v):
-        dense = randk_decompress(v, start_block, n_rows=np_,
-                                 block_rows=block_rows)
-        return dense[:n]
-
-    return vals, reconstruct
-
-
-__all__ = ["qsgd", "diana_shift", "randk_rows", "randk_compress",
-           "randk_decompress", "TILE", "LANES", "BLOCK_ROWS"]
+__all__ = ["qsgd", "diana_shift", "randk_compress", "randk_decompress",
+           "TILE", "LANES", "BLOCK_ROWS"]

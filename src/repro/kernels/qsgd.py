@@ -40,7 +40,10 @@ def qsgd_quantize(x: jax.Array, u: jax.Array, *, levels: int = 8,
         interpret = jax.default_backend() == "cpu"
     n = x.shape[0]
     tiles = n // TILE
-    bt = min(_BLOCK_TILES, tiles)
+    # interpret mode (CPU correctness path): one grid step — the emulated
+    # grid loop copies the full output buffers every step, so block size is
+    # a pure overhead knob there; VMEM limits only bind on real TPUs.
+    bt = tiles if interpret else min(_BLOCK_TILES, tiles)
     grid = (pl.cdiv(tiles, bt),)
     xt = x.reshape(tiles, TILE)
     ut = u.reshape(tiles, TILE)

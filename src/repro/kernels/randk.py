@@ -9,6 +9,13 @@ the whole compression is one HBM read of k rows, no index lists.
 
   randk_compress:   rows (N, D), start -> (K, D) * (N/K)   [gather+scale]
   randk_decompress: vals (K, D), start -> (N, D) zeros elsewhere [scatter]
+  randk_mask:       x (M, Dp), starts (M,) -> dense Q(x) per client
+
+`randk_mask` is the simulator-side fused compress+decompress (DESIGN.md
+§3.5): the algorithms' math consumes the dense reconstruction Q(x), and for
+a circular-window Rand-k that is just a masked scale — one elementwise pass,
+batched over all M clients in a single launch, each client with its own
+prefetched window start. No gather, no scatter, no per-leaf loop.
 """
 from __future__ import annotations
 
@@ -90,3 +97,68 @@ def randk_decompress(vals: jax.Array, start_block: jax.Array, *, n_rows: int,
         out_shape=jax.ShapeDtypeStruct((n_rows, d), vals.dtype),
         interpret=interpret,
     )(start_block.reshape(1).astype(jnp.int32), vals)
+
+
+# ---------------------------------------------------------------------------
+# fused dense Rand-k reconstruction (simulator hot path)
+# ---------------------------------------------------------------------------
+
+MASK_LANES = 128
+_MASK_ROWS = 512  # (512, 128) f32 block = 256 KiB VMEM per input
+
+
+def _mask_kernel(starts_ref, x_ref, o_ref, *, d: int, k: int, lanes: int,
+                 block_rows: int):
+    m = pl.program_id(0)
+    j = pl.program_id(1)
+    start = starts_ref[m]
+    base = j * block_rows * lanes
+    row_i = jax.lax.broadcasted_iota(jnp.int32, (1, block_rows, lanes), 1)
+    lane_i = jax.lax.broadcasted_iota(jnp.int32, (1, block_rows, lanes), 2)
+    idx = base + row_i * lanes + lane_i  # flat coordinate within this client
+    # circular window of k real coordinates: (idx - start) mod d < k; padding
+    # coordinates (idx >= d) are always dropped. `idx - start + d` keeps the
+    # rem argument non-negative (lax.rem keeps the dividend's sign).
+    off = jax.lax.rem(idx - start + d, d)
+    inside = (off < k) & (idx < d)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.where(inside, x * (d / k), 0.0).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("d", "k", "block_rows", "interpret"))
+def randk_mask(x: jax.Array, starts: jax.Array, *, d: int, k: int,
+               block_rows: int = _MASK_ROWS,
+               interpret: bool | None = None) -> jax.Array:
+    """Dense circular-window Rand-k for M clients in one launch.
+
+    x: (M, Dp) with Dp % (block_rows*MASK_LANES) adjusted internally;
+    starts: (M,) int32 window offsets in [0, d). `d` is the REAL flat length
+    (d <= Dp); coordinates past d are padding and stay zero. Returns Q(x)
+    with Q(x)[m, i] = x[m, i] * (d/k) if (i - starts[m]) mod d < k else 0.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, dp = x.shape
+    rows = dp // MASK_LANES
+    if interpret:
+        br = rows  # one grid step per client (see kernels/qsgd.py note)
+    else:
+        br = min(block_rows, rows)
+        while rows % br:  # keep the grid exact (dp is 1024-aligned by callers)
+            br //= 2
+        br = max(br, 1)
+    grid = (m, rows // br)
+    xt = x.reshape(m, rows, MASK_LANES)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, br, MASK_LANES), lambda i, j, starts: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, br, MASK_LANES), lambda i, j, starts: (i, j, 0)),
+    )
+    out = pl.pallas_call(
+        partial(_mask_kernel, d=d, k=k, lanes=MASK_LANES, block_rows=br),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, rows, MASK_LANES), x.dtype),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), xt)
+    return out.reshape(m, dp)

@@ -55,6 +55,19 @@ def randk_decompress_ref(vals: jax.Array, start_block: jax.Array, *,
     return canvas.reshape(n_rows, d)
 
 
+def randk_mask_ref(x: jax.Array, starts: jax.Array, *, d: int, k: int) -> jax.Array:
+    """Dense circular-window Rand-k, batched over clients.
+
+    x: (M, Dp) possibly padded past the real flat length d; starts: (M,).
+    Q(x)[m, i] = x[m, i] * (d/k) for (i - starts[m]) mod d < k, else 0.
+    """
+    dp = x.shape[1]
+    idx = jnp.arange(dp, dtype=jnp.int32)
+    off = jnp.mod(idx[None, :] - starts[:, None].astype(jnp.int32), d)
+    inside = (off < k) & (idx[None, :] < d)
+    return jnp.where(inside, x.astype(jnp.float32) * (d / k), 0.0).astype(x.dtype)
+
+
 def diana_shift_update_ref(h, q_own, mh, q_mean, alpha: float):
     """Fused DIANA state update (Algorithm 3/5 lines 7-11):
         direction = H_t + Q_mean

@@ -1,0 +1,45 @@
+"""Version compatibility for the launch layer's newer-JAX APIs.
+
+The production code targets current JAX (`jax.shard_map` with partial-manual
+`axis_names`, `jax.set_mesh`); the pinned CPU environment ships 0.4.x where
+the same machinery lives in `jax.experimental.shard_map` (`auto=` is the
+complement of `axis_names`) and there is no ambient-mesh setter. These
+wrappers keep one call site per feature so the rest of launch/ reads like
+the current-JAX production code.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """`jax.shard_map` on new JAX; `jax.experimental.shard_map` otherwise.
+
+    `axis_names` = the MANUAL axes (new-API convention); on the experimental
+    API that becomes `auto = mesh.axis_names - axis_names`.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def set_mesh(mesh):
+    """`jax.set_mesh` context on new JAX; on 0.4.x the Mesh object itself is
+    the context manager that sets the ambient resource env (what
+    `with_sharding_constraint(x, PartitionSpec(...))` resolves against)."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh

@@ -22,6 +22,8 @@ import traceback
 
 import jax
 
+from repro.launch import compat
+
 from repro.configs import (
     ARCH_NAMES,
     INPUT_SHAPES,
@@ -52,7 +54,7 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
             seq_shard=seq_shard
         )
         key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jitted.lower(abstract, specs["batch"], key)
     elif shape.kind == "prefill":
         prefill, lower_args = steps.make_prefill_step(
@@ -62,7 +64,7 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
             lambda: transformer.init_params(jax.random.key(0), cfg)
         )
         jitted = lower_args(params_abs, specs["batch"])
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jitted.lower(params_abs, specs["batch"])
     else:  # decode
         serve, lower_args = steps.make_serve_step(cfg, mesh, unroll=unroll)
@@ -70,7 +72,7 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
             lambda: transformer.init_params(jax.random.key(0), cfg)
         )
         jitted, _ = lower_args(params_abs, specs["cache"], specs["tokens"])
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jitted.lower(params_abs, specs["cache"],
                                    specs["tokens"], specs["pos"])
     return lowered.compile()

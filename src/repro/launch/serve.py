@@ -15,6 +15,8 @@ import argparse
 import time
 
 import jax
+
+from repro.launch import compat
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, reduced
@@ -54,7 +56,7 @@ def main():
             key, (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
 
     serve, lower_args = steps.make_serve_step(cfg, mesh)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         logits, cache = T.prefill(params, batch, cfg, cache_len=cache_len)
         jitted, (psh, csh, tsh) = lower_args(
             jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),

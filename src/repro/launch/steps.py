@@ -28,7 +28,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dist import CompressedAggregation, DianaState
-from repro.launch import sharding
+from repro.launch import compat, sharding
 from repro.launch.mesh import client_axes as _client_axes, num_clients
 from repro.models import transformer
 from repro.models.config import ArchConfig
@@ -176,7 +176,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         step=P(),
         opt_state=P(),  # server state: identical on every client
     )
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         client_fn,
         mesh=mesh,
         in_specs=(state_manual_specs, P(caxes), P()),

@@ -18,6 +18,8 @@ import argparse
 import time
 
 import jax
+
+from repro.launch import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -81,7 +83,7 @@ def main():
             size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
     sampler = ReshuffleSampler(m, n_batches, mode=args.sampling, seed=1)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = jax.device_put(
             steps.init_train_state(jax.random.key(0), cfg, agg, m,
                                    optimizer=args.optimizer), shardings)

@@ -26,7 +26,14 @@ import math
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.lax import RaggedDotDimensionNumbers, ragged_dot_general
+
+try:  # jax >= 0.5 exposes the batched ragged dot; older pins need the fallback
+    from jax.lax import RaggedDotDimensionNumbers, ragged_dot_general
+
+    _HAS_RAGGED_GENERAL = True
+except ImportError:  # pragma: no cover - exercised on the pinned 0.4.x JAX
+    RaggedDotDimensionNumbers = ragged_dot_general = None
+    _HAS_RAGGED_GENERAL = False
 
 from repro.models.config import ArchConfig
 from repro.models.layers import init_mlp, linear, mlp
@@ -51,13 +58,29 @@ _RAGGED_DN = RaggedDotDimensionNumbers(
     dot_dimension_numbers=(((2,), (1,)), ((), ())),
     lhs_ragged_dimensions=[1],
     rhs_group_dimensions=[0],
-)
+) if _HAS_RAGGED_GENERAL else None
+
+
+def _segment_ids(group_sizes, length):
+    """group_sizes (B, E) -> (B, length) expert id of each sorted token slot."""
+    ends = jnp.cumsum(group_sizes, axis=-1)  # (B, E)
+    slots = jnp.arange(length)
+    return jnp.sum(slots[None, :, None] >= ends[:, None, :], axis=-1)
 
 
 def _ragged(lhs, rhs, group_sizes):
     """lhs (B, T, K_dim) x rhs (E, K_dim, N) grouped by row -> (B, T, N)."""
-    return ragged_dot_general(lhs, rhs, group_sizes, _RAGGED_DN,
-                              preferred_element_type=lhs.dtype)
+    if _HAS_RAGGED_GENERAL:
+        return ragged_dot_general(lhs, rhs, group_sizes, _RAGGED_DN,
+                                  preferred_element_type=lhs.dtype)
+    # Dense einsum fallback for JAX pins without lax.ragged_dot_general: run
+    # every expert on every token, then select each token's expert by its
+    # group segment. Same result; E/k more FLOPs — matches what XLA's CPU
+    # group-loop lowering does anyway (see the roofline note above).
+    seg = _segment_ids(group_sizes, lhs.shape[1])  # (B, T)
+    onehot = jax.nn.one_hot(seg, rhs.shape[0], dtype=lhs.dtype)  # (B, T, E)
+    h = jnp.einsum("btd,edf->btef", lhs, rhs)
+    return jnp.einsum("btef,bte->btf", h, onehot).astype(lhs.dtype)
 
 
 def moe_ffn(p, x, cfg: ArchConfig, *, return_aux: bool = False):

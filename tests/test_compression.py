@@ -111,6 +111,31 @@ def test_registry():
         get_compressor("nope")
 
 
+def test_randk_requires_k_or_fraction():
+    """k=None + fraction=None used to crash later with a cryptic TypeError
+    inside _k; now it raises a clear ValueError at construction."""
+    with pytest.raises(ValueError, match="k or fraction"):
+        RandK(k=None, fraction=None)
+    with pytest.raises(ValueError, match="k or fraction"):
+        TopK(k=None, fraction=None)
+    with pytest.raises(ValueError, match="k or fraction"):
+        get_compressor("randk", k=None, fraction=None)
+
+
+def test_tree_compress_flat_buffer_semantics():
+    """tree_compress ravels the whole tree into one operator call: for
+    Rand-k the k is computed from the TOTAL size and the (scaled) survivors
+    match the originals coordinate-wise."""
+    tree = {"a": jnp.arange(1.0, 33.0).reshape(8, 4), "b": jnp.arange(1.0, 11.0)}
+    comp = RandK(fraction=0.5)  # total d=42 -> k=21 across the whole tree
+    out = tree_compress(comp, jax.random.PRNGKey(3), tree)
+    flat = np.concatenate([np.asarray(out["a"]).ravel(), np.asarray(out["b"])])
+    orig = np.concatenate([np.asarray(tree["a"]).ravel(), np.asarray(tree["b"])])
+    (nz,) = np.nonzero(flat)
+    assert len(nz) == 21
+    np.testing.assert_allclose(flat[nz], orig[nz] * 42 / 21, rtol=1e-6)
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     d=st.integers(min_value=2, max_value=257),

