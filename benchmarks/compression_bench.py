@@ -24,6 +24,12 @@ speedup-vs-seed from regressing.
 """
 from __future__ import annotations
 
+import os
+
+# the pod-wire section runs real multi-device meshes (1x4x2 / 2x2x2);
+# must precede the first jax import (device count locks on init)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import argparse
 import dataclasses
 import json
@@ -196,6 +202,62 @@ def run_scale(name: str, tree, *, fraction: float, levels: int, reps: int):
     return out
 
 
+def run_pod_wire(*, d: int, fraction: float, reps: int):
+    """Two-level pod wire vs flat wire: step time + bytes on each wire.
+
+    Runs the production aggregate() inside the fully-manual shard_map wire
+    region (core/dist.py) on two 8-device meshes: (1,4,2) — one pod, the
+    flat-equivalent path — and (2,2,2) — two pods, where the inter-pod
+    exchange is live. Bytes come from the static wire accounting
+    (`wire_bytes_per_round`); the headline is that the inter-pod wire moves
+    ~fraction of the dense bytes while the step time stays flat.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.dist import CompressedAggregation
+    from repro.launch import compat
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import configure_agg
+
+    print(f"\n--- pod wire: d={d:,} params/client, k/d={fraction} " + "-" * 18)
+    out = {"d": d, "fraction": fraction}
+    for label, shape, axes in (
+        ("1-pod", (1, 4, 2), ("pod", "data", "model")),
+        ("2-pod", (2, 2, 2), ("pod", "data", "model")),
+    ):
+        mesh = make_test_mesh(shape, axes)
+        agg = configure_agg(
+            CompressedAggregation(method="diana", wire="shared",
+                                  fraction=fraction,
+                                  shift_dtype=jnp.float32), mesh)
+        grads = {"w": jax.random.normal(jax.random.key(5), (4, d),
+                                        jnp.float32)}
+        specs = {"w": P(("pod", "data"), "model")}
+
+        def round_fn(g, agg=agg):
+            g = jax.tree.map(lambda x: x[0], g)
+            state = agg.init(g)
+            direction, _ = agg.aggregate(g, state, jax.random.PRNGKey(0))
+            return jax.tree.map(lambda x: x[None], direction)
+
+        mapped = compat.shard_map(round_fn, mesh=mesh, in_specs=(specs,),
+                                  out_specs=specs,
+                                  axis_names=set(mesh.axis_names),
+                                  check_vma=False)
+        sec = bench(mapped, grads, reps=reps)
+        local = {"w": jnp.zeros((d // 2,), jnp.float32)}  # per-device block
+        wire = agg.wire_bytes_per_round(local)
+        print(f"pod    {label:10s} {fmt(sec)}   intra {wire['intra_pod']:>10,}B"
+              f"  inter {wire['inter_pod']:>10,}B  (dense {wire['dense']:,}B)")
+        out[label] = {"step_s": sec, **wire}
+    ratio = out["2-pod"]["step_s"] / out["1-pod"]["step_s"]
+    out["two_pod_overhead_x"] = ratio
+    comp = out["2-pod"]["inter_pod"] / max(out["2-pod"]["dense"], 1)
+    print(f"pod    2-pod/1-pod step time {ratio:5.2f}x; inter-pod wire moves "
+          f"{100 * comp:.1f}% of dense bytes")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -228,6 +290,11 @@ def main() -> None:
     results["scales"]["transformer"] = run_scale(
         "transformer", transformer_tree(8, key, **tcfg),
         fraction=0.05, levels=8, reps=max(3, reps // 2),
+    )
+
+    results["pod_wire"] = run_pod_wire(
+        d=8_192 if args.quick else 65_536, fraction=0.05,
+        reps=max(3, reps // 2),
     )
 
     sp = results["scales"]["logreg"]["randk_speedup_pallas_vs_seed"]

@@ -201,6 +201,22 @@ class CompressionBackend:
 
     # -- wire primitives (the pod shared-seed Rand-block collective) ----------
 
+    def wire_exchange(self, rows: jax.Array, start_block: jax.Array, *,
+                      k_blocks: int, block_rows: int,
+                      axes: tuple[str, ...]):
+        """One level of the (possibly hierarchical) shared wire: circular
+        gather of the k-row slab, then the sparse collective over `axes`.
+
+        Returns (own_vals, mean_vals). This is the per-level dispatch point:
+        the intra-pod ("data") and inter-pod ("pod") exchanges both land
+        here, each with its own start_block/k_blocks, so only the compressed
+        slab ever crosses either wire. Must run inside a shard_map whose
+        manual axes include `axes`.
+        """
+        vals = self.wire_compress(rows, start_block, k_blocks=k_blocks,
+                                  block_rows=block_rows)
+        return vals, jax.lax.pmean(vals, axes)
+
     def wire_compress(self, rows: jax.Array, start_block: jax.Array, *,
                       k_blocks: int, block_rows: int) -> jax.Array:
         """(N, D) rows -> (k_blocks*block_rows, D) circular gather + scale."""

@@ -1,7 +1,7 @@
 """Production compressed-gradient aggregation for TPU pods.
 
 This is the paper's communication layer rethought for ICI collectives
-(DESIGN.md §3). Clients are the mesh's ("pod","data") ranks. Two wire modes:
+(DESIGN.md §3). Two wire modes:
 
 ``independent`` (paper-exact semantics)
     Every client Rand-k-compresses its own gradient with an *independent*
@@ -11,9 +11,8 @@ This is the paper's communication layer rethought for ICI collectives
     recorded in EXPERIMENTS.md §Perf.
 
 ``shared`` (TPU-native sparse collective — beyond-paper optimization)
-    All clients draw the *same* coordinate block per round (shared PRNG seed,
-    folded with the model-axis index so every model shard picks its own
-    block). Then only the k selected values are psum'd: collective bytes drop
+    All clients draw the *same* coordinate block per round (shared PRNG
+    seed). Then only the k selected values are psum'd: collective bytes drop
     by d/k (~50x at the paper's k/d≈0.02). Coordinates are a contiguous
     random block of whole 8-row groups ("Rand-block", DESIGN.md §3.2):
     uniform marginal inclusion probability k/d gives exactly the Rand-k
@@ -28,6 +27,25 @@ This is the paper's communication layer rethought for ICI collectives
     compressed residual d_m -> 0 so the fixed point is unchanged (Theorem 2
     logic carries over).
 
+Two-level (pod) hierarchy (DESIGN.md §3.6):
+
+    When `pod_axes` is non-empty the wire is HIERARCHICAL. The inner level
+    runs the exchange above over `client_axes` (the ranks inside one pod,
+    fast ICI); the outer level runs a second, *independently keyed*
+    compressed exchange over `pod_axes` (the slow inter-pod links), applied
+    to the inner level's output. DIANA shifts exist at both levels
+    (`DianaState.shifts/mean_shift` inner, `pod_shifts/pod_mean_shift`
+    outer), so both compressed residuals -> 0 and the fixed point is still
+    the exact mean. The composed operator is unbiased with second moment
+    (1+omega_1)(1+omega_2)||x||^2 (tower rule over the two independent
+    draws). With a single pod (`pod_size == 1`) there is no inter-pod link,
+    so the outer exchange degrades to the identity — the two-level wire
+    bit-matches the flat wire (tests/test_pod_wire.py parity test).
+
+    `client_axes=()` is also allowed: each outer rank is a pod of one
+    client, which is exactly the paper's Algorithms 4-5 layout when the
+    launch layer maps NASTYA local epochs onto the mesh (launch/steps.py).
+
 Aggregation methods (paper Secs. 2.1-2.2, production variants):
 
 - ``dense``     plain mean gradient (no compression) — sanity baseline
@@ -40,8 +58,8 @@ Aggregation methods (paper Secs. 2.1-2.2, production variants):
                     H_t+1  = H_t + alpha * mean_m Q(g_m - h_m)
 
 All functions are designed to run INSIDE a `shard_map` body whose manual axes
-include the client axes; gradients arrive as this device's local block of the
-parameter pytree, and `lax.pmean` over `client_axes` is the server.
+include the client/pod axes; gradients arrive as this device's local block of
+the parameter pytree, and `lax.pmean` over the level's axes is the server.
 """
 from __future__ import annotations
 
@@ -50,17 +68,32 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.compression.backend import get_backend
 from repro.kernels.randk import BLOCK_ROWS
 
+# salt folded into the round key to derive the inter-pod (outer) wire key —
+# the two levels' coordinate draws must be independent (the composed variance
+# bound is a tower-rule product of two independent expectations)
+POD_KEY_SALT = 0x70D5
+
 
 class DianaState(NamedTuple):
-    """Per-device compression state (local blocks of param-shaped trees)."""
+    """Per-device compression state (local blocks of param-shaped trees).
 
-    shifts: Any  # h_m: this client's shift (per-client, differs across data axis)
-    mean_shift: Any  # H_t = (1/M) sum_m h_m (identical on every client)
+    `shifts`/`mean_shift` are the inner (intra-pod) level: h_m per client
+    rank and their per-pod running mean. `pod_shifts`/`pod_mean_shift` are
+    the outer (inter-pod) level: one shift per pod and the global mean.
+    Unused levels hold None (flat wire: pod_* is None; pod-granular NASTYA
+    with `client_axes=()`: the inner pair is None).
+    """
+
+    shifts: Any  # h_m: this client's shift (differs across client_axes)
+    mean_shift: Any  # H_t = (1/M) sum_m h_m (identical within a pod)
+    pod_shifts: Any = None  # h_p: this pod's shift (differs across pod_axes)
+    pod_mean_shift: Any = None  # (1/P) sum_p h_p (identical everywhere)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,10 +102,14 @@ class CompressedAggregation:
 
     method: str = "diana"  # 'dense' | 'q' | 'diana'
     wire: str = "shared"  # 'shared' | 'independent'
-    fraction: float = 0.02  # k/d
+    fraction: float = 0.02  # k/d on the intra-pod (inner) wire
     alpha: float | None = None  # shift stepsize; None -> 1/(1+omega) (Thm 2)
     shift_dtype: Any = jnp.bfloat16
-    client_axes: tuple[str, ...] = ("data",)
+    client_axes: tuple[str, ...] = ("data",)  # inner level (ranks in a pod)
+    pod_axes: tuple[str, ...] = ()  # outer level; () = flat single-level wire
+    pod_size: int = 1  # static product of pod_axes sizes (1 = no inter-pod link)
+    pod_fraction: float | None = None  # inter-pod k/d; None -> `fraction`
+    pod_alpha: float | None = None  # pod shift stepsize; None -> 1/(1+omega_pod)
     backend: str | None = None  # 'reference' | 'pallas' | None (env/default)
 
     # -- state ---------------------------------------------------------------
@@ -81,9 +118,13 @@ class CompressedAggregation:
         if self.method != "diana":
             return None
         zeros = lambda p: jnp.zeros(p.shape, self.shift_dtype)
+        inner = bool(self.client_axes)
+        outer = bool(self.pod_axes)
         return DianaState(
-            shifts=jax.tree.map(zeros, local_params),
-            mean_shift=jax.tree.map(zeros, local_params),
+            shifts=jax.tree.map(zeros, local_params) if inner else None,
+            mean_shift=jax.tree.map(zeros, local_params) if inner else None,
+            pod_shifts=jax.tree.map(zeros, local_params) if outer else None,
+            pod_mean_shift=jax.tree.map(zeros, local_params) if outer else None,
         )
 
     def omega(self) -> float:
@@ -91,12 +132,28 @@ class CompressedAggregation:
             return 0.0
         return 1.0 / self.fraction - 1.0
 
+    def pod_omega(self) -> float:
+        if self.method == "dense" or self.pod_size == 1:
+            return 0.0
+        f = self.fraction if self.pod_fraction is None else self.pod_fraction
+        return 1.0 / f - 1.0
+
     @property
     def shift_lr(self) -> float:
         """alpha <= 1/(1+omega) (Theorem 2 / 4 condition)."""
         if self.alpha is not None:
             return self.alpha
         return 1.0 / (1.0 + self.omega())
+
+    @property
+    def pod_shift_lr(self) -> float:
+        if self.pod_alpha is not None:
+            return self.pod_alpha
+        return 1.0 / (1.0 + self.pod_omega())
+
+    @property
+    def _pod_fraction(self) -> float:
+        return self.fraction if self.pod_fraction is None else self.pod_fraction
 
     # -- per-leaf compression primitives --------------------------------------
     #
@@ -113,8 +170,8 @@ class CompressedAggregation:
             return jnp.reshape(leaf, (-1, leaf.shape[-1]))
         return jnp.reshape(leaf, (-1, 1))
 
-    def _k(self, size: int) -> int:
-        return max(1, int(self.fraction * size))
+    def _k(self, size: int, fraction: float) -> int:
+        return max(1, int(fraction * size))
 
     def _leaf_key(self, key, leaf_idx: int) -> jax.Array:
         return jax.random.fold_in(key, leaf_idx)
@@ -122,15 +179,121 @@ class CompressedAggregation:
     # -- aggregation ----------------------------------------------------------
 
     def aggregate(self, grads, state: DianaState | None, key):
-        """(direction, new_state); call inside shard_map over client axes."""
+        """(direction, new_state); call inside shard_map over the wire axes.
+
+        Composed two-level exchange: the inner (intra-pod) level over
+        `client_axes` with `key`, then the outer (inter-pod) level over
+        `pod_axes` with an independently salted key. Either level degrades
+        to a passthrough when its axes are empty (flat wire / 1-client pod).
+        """
+        if self.method == "dense":
+            axes = tuple(self.client_axes) + tuple(self.pod_axes)
+            direction = jax.tree.map(lambda g: lax.pmean(g, axes), grads)
+            return direction, state
+        direction, state = self.aggregate_local(grads, state, key)
+        return self.aggregate_pod(direction, state, key)
+
+    def aggregate_local(self, grads, state: DianaState | None, key):
+        """Inner level only: compressed exchange over `client_axes`.
+
+        This is what each NASTYA local step runs — the pod's ranks psum
+        their compressed gradients over the fast intra-pod ICI; the slow
+        inter-pod wire is only touched once per epoch by `aggregate_pod`.
+        """
         if self.method == "dense":
             direction = jax.tree.map(
                 lambda g: lax.pmean(g, self.client_axes), grads
             )
             return direction, state
-        if self.wire == "shared":
-            return self._aggregate_shared(grads, state, key)
-        return self._aggregate_independent(grads, state, key)
+        if not self.client_axes:  # a pod of one client: no intra-pod wire
+            return grads, state
+        h = state.shifts if self.method == "diana" else None
+        mh = state.mean_shift if self.method == "diana" else None
+        dirs, new_h, new_mh = self._level(
+            grads, h, mh, key,
+            axes=self.client_axes,
+            fold_axes=tuple(self.pod_axes) + tuple(self.client_axes),
+            fraction=self.fraction, alpha=self.shift_lr,
+        )
+        if self.method == "diana":
+            state = state._replace(shifts=new_h, mean_shift=new_mh)
+        return dirs, state
+
+    def aggregate_pod(self, direction, state: DianaState | None, key):
+        """Outer level only: compressed exchange over `pod_axes`.
+
+        `key` is the same round key given to `aggregate_local`; the actual
+        coordinate draw uses fold_in(key, POD_KEY_SALT) so the two levels
+        are independent. A single pod (`pod_size == 1`) has no inter-pod
+        link: the exchange is the exact mean over the (size-1) pod axes —
+        numerically the identity, which is what makes the 1-pod two-level
+        wire bit-match the flat wire.
+        """
+        if not self.pod_axes or self.method == "dense":
+            if self.pod_axes:
+                direction = jax.tree.map(
+                    lambda g: lax.pmean(g, self.pod_axes), direction
+                )
+            return direction, state
+        if self.pod_size == 1:
+            direction = jax.tree.map(
+                lambda g: lax.pmean(g, self.pod_axes), direction
+            )
+            return direction, state
+        pod_key = jax.random.fold_in(key, POD_KEY_SALT)
+        h = state.pod_shifts if self.method == "diana" else None
+        mh = state.pod_mean_shift if self.method == "diana" else None
+        dirs, new_h, new_mh = self._level(
+            direction, h, mh, pod_key,
+            axes=self.pod_axes, fold_axes=tuple(self.pod_axes),
+            fraction=self._pod_fraction, alpha=self.pod_shift_lr,
+        )
+        if self.method == "diana":
+            state = state._replace(pod_shifts=new_h, pod_mean_shift=new_mh)
+        return dirs, state
+
+    # -- one exchange level ----------------------------------------------------
+
+    def _level(self, grads, h_tree, mh_tree, key, *, axes, fold_axes,
+               fraction, alpha):
+        """One compressed exchange over `axes`: Q per rank, psum, (DIANA).
+
+        Returns (direction_tree, new_shifts_tree, new_mean_shift_tree); the
+        shift trees are None when h_tree is None (method 'q').
+        """
+        compress = (self._exchange_shared if self.wire == "shared"
+                    else self._exchange_independent)
+        leaves, treedef = jax.tree.flatten(grads)
+        if h_tree is None:  # 'q': direction = mean_m Q(g_m)
+            out = []
+            for i, g in enumerate(leaves):
+                _, q_mean = compress(self._leaf_key(key, i), g, axes,
+                                     fold_axes, fraction)
+                out.append(q_mean.astype(g.dtype))
+            return jax.tree.unflatten(treedef, out), None, None
+
+        # 'diana' — the shift/direction arithmetic runs through the fused
+        # kernel (one pass over four inputs, three outputs) instead of five
+        # separate param-sized HBM round-trips.
+        be = get_backend(self.backend)
+        h_leaves = jax.tree.leaves(h_tree)
+        mh_leaves = jax.tree.leaves(mh_tree)
+        dirs, new_h, new_mh = [], [], []
+        for i, (g, h, mh) in enumerate(zip(leaves, h_leaves, mh_leaves)):
+            delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+            q_own, q_mean = compress(self._leaf_key(key, i), delta, axes,
+                                     fold_axes, fraction)
+            direction, h_new, mh_new = be.diana_shift_flat(
+                h.astype(self.shift_dtype), q_own.astype(jnp.float32),
+                mh.astype(self.shift_dtype), q_mean.astype(jnp.float32),
+                alpha=alpha,
+            )
+            new_h.append(h_new)
+            new_mh.append(mh_new)
+            dirs.append(direction.astype(g.dtype))
+        return (jax.tree.unflatten(treedef, dirs),
+                jax.tree.unflatten(treedef, new_h),
+                jax.tree.unflatten(treedef, new_mh))
 
     # shared-seed Rand-block: sparse collectives -------------------------------
     #
@@ -147,20 +310,27 @@ class CompressedAggregation:
             rows = jnp.pad(rows, ((0, pad), (0, 0)))
         return rows
 
-    def _wire_geometry(self, n_rows_padded: int) -> tuple[int, int]:
+    def _wire_geometry(self, n_rows_padded: int,
+                       fraction: float) -> tuple[int, int]:
         nb = n_rows_padded // BLOCK_ROWS
-        return nb, max(1, int(self.fraction * nb))
+        return nb, max(1, int(fraction * nb))
 
-    def _compress_shared_leaf(self, key, delta):
-        """Returns (start_block, own_vals, mean_vals) for one leaf."""
+    def _exchange_shared(self, key, delta, axes, fold_axes, fraction):
+        """Shared-key Rand-block exchange of one leaf over `axes`.
+
+        Returns (q_own, q_mean) dense reconstructions. Only the k-row slab
+        crosses the wire (the sparse collective runs inside the backend's
+        `wire_exchange`); both reconstructions reuse the one start_block.
+        """
+        del fold_axes  # shared draw: every rank uses the same key
         be = get_backend(self.backend)
         rows = self._pad_rows(self._row_view(delta))
-        nb, kb = self._wire_geometry(rows.shape[0])
+        nb, kb = self._wire_geometry(rows.shape[0], fraction)
         start_block = jax.random.randint(key, (), 0, nb)
-        vals = be.wire_compress(rows, start_block, k_blocks=kb,
-                                block_rows=BLOCK_ROWS)
-        mean_vals = lax.pmean(vals, self.client_axes)  # the sparse collective
-        return start_block, vals, mean_vals
+        vals, mean_vals = be.wire_exchange(rows, start_block, k_blocks=kb,
+                                           block_rows=BLOCK_ROWS, axes=axes)
+        return (self._scatter_block(delta, start_block, vals),
+                self._scatter_block(delta, start_block, mean_vals))
 
     def _scatter_block(self, template, start_block, vals):
         be = get_backend(self.backend)
@@ -170,91 +340,53 @@ class CompressedAggregation:
                                    block_rows=BLOCK_ROWS)
         return jnp.reshape(dense[:shape[0]], template.shape)
 
-    def _aggregate_shared(self, grads, state, key):
-        leaves, treedef = jax.tree.flatten(grads)
-        if self.method == "q":
-            out = []
-            for i, g in enumerate(leaves):
-                start, _, mean_vals = self._compress_shared_leaf(
-                    self._leaf_key(key, i), g
-                )
-                out.append(self._scatter_block(g, start, mean_vals))
-            return jax.tree.unflatten(treedef, out), state
-
-        # diana — the shift/direction arithmetic runs through the fused
-        # kernel (one pass over four inputs, three outputs) instead of five
-        # separate param-sized HBM round-trips.
-        be = get_backend(self.backend)
-        h_leaves = jax.tree.leaves(state.shifts)
-        mh_leaves = jax.tree.leaves(state.mean_shift)
-        dirs, new_h, new_mh = [], [], []
-        for i, (g, h, mh) in enumerate(zip(leaves, h_leaves, mh_leaves)):
-            delta = g.astype(jnp.float32) - h.astype(jnp.float32)
-            start, own_vals, mean_vals = self._compress_shared_leaf(
-                self._leaf_key(key, i), delta
-            )
-            q_mean = self._scatter_block(g, start, mean_vals)
-            q_own = self._scatter_block(g, start, own_vals)
-            direction, h_new, mh_new = be.diana_shift_flat(
-                h.astype(self.shift_dtype), q_own.astype(jnp.float32),
-                mh.astype(self.shift_dtype), q_mean.astype(jnp.float32),
-                alpha=self.shift_lr,
-            )
-            new_h.append(h_new)
-            new_mh.append(mh_new)
-            dirs.append(direction.astype(g.dtype))
-        new_state = DianaState(
-            shifts=jax.tree.unflatten(treedef, new_h),
-            mean_shift=jax.tree.unflatten(treedef, new_mh),
-        )
-        return jax.tree.unflatten(treedef, dirs), new_state
-
     # independent-seed Rand-k: paper-exact, dense collectives ------------------
 
-    def _compress_independent_leaf(self, key, delta):
+    def _exchange_independent(self, key, delta, axes, fold_axes, fraction):
         """Unbiased Rand-k over rows (with-replacement indices: omega <= n/k,
-        avoids a full permutation sort on device; see DESIGN.md §3)."""
-        rows = self._row_view(delta)
+        avoids a full permutation sort on device; see DESIGN.md §3), one
+        independent draw per rank (key folded with the rank's coordinates
+        along `fold_axes`), then a dense psum over `axes`."""
+        for ax in fold_axes:
+            key = jax.random.fold_in(key, lax.axis_index(ax))
+        rows = self._row_view(delta.astype(jnp.float32))
         n = rows.shape[0]
-        k = self._k(n)
+        k = self._k(n, fraction)
         idx = jax.random.randint(key, (k,), 0, n)
         vals = rows[idx] * (n / k)
-        out = jnp.zeros_like(rows).at[idx].add(vals)
-        return jnp.reshape(out, delta.shape)
+        out = jnp.reshape(jnp.zeros_like(rows).at[idx].add(vals), delta.shape)
+        return out, lax.pmean(out, axes)
 
-    def _client_key(self, key, leaf_idx: int) -> jax.Array:
-        key = self._leaf_key(key, leaf_idx)
-        for ax in self.client_axes:
-            key = jax.random.fold_in(key, lax.axis_index(ax))
-        return key
+    # -- wire accounting (benchmarks / EXPERIMENTS.md) -------------------------
 
-    def _aggregate_independent(self, grads, state, key):
-        leaves, treedef = jax.tree.flatten(grads)
-        if self.method == "q":
-            out = []
-            for i, g in enumerate(leaves):
-                q = self._compress_independent_leaf(self._client_key(key, i),
-                                                    g.astype(jnp.float32))
-                out.append(lax.pmean(q, self.client_axes).astype(g.dtype))
-            return jax.tree.unflatten(treedef, out), state
+    def wire_bytes_per_round(self, params) -> dict[str, int]:
+        """Bytes one rank contributes to each wire level per round.
 
-        be = get_backend(self.backend)
-        h_leaves = jax.tree.leaves(state.shifts)
-        mh_leaves = jax.tree.leaves(state.mean_shift)
-        dirs, new_h, new_mh = [], [], []
-        for i, (g, h, mh) in enumerate(zip(leaves, h_leaves, mh_leaves)):
-            delta = g.astype(jnp.float32) - h.astype(jnp.float32)
-            q_own = self._compress_independent_leaf(self._client_key(key, i), delta)
-            q_mean = lax.pmean(q_own, self.client_axes)  # dense collective
-            direction, h_new, mh_new = be.diana_shift_flat(
-                h.astype(self.shift_dtype), q_own,
-                mh.astype(self.shift_dtype), q_mean, alpha=self.shift_lr,
-            )
-            dirs.append(direction.astype(g.dtype))
-            new_h.append(h_new)
-            new_mh.append(mh_new)
-        new_state = DianaState(
-            shifts=jax.tree.unflatten(treedef, new_h),
-            mean_shift=jax.tree.unflatten(treedef, new_mh),
-        )
-        return jax.tree.unflatten(treedef, dirs), new_state
+        'intra_pod' is the inner shared-wire slab (k-row blocks, f32);
+        'inter_pod' the outer level's slab; 'dense' what an uncompressed
+        psum of the same tree would move. The shared wire's sparse psum
+        moves exactly the compressed slab; the independent wire moves the
+        dense size regardless of k (the zeros travel — DESIGN.md §3.1).
+        """
+        dense = intra = inter = 0
+        for leaf in jax.tree.leaves(params):
+            rows = int(np.prod(leaf.shape[:-1])) if leaf.ndim >= 2 else int(
+                np.prod(leaf.shape))
+            cols = leaf.shape[-1] if leaf.ndim >= 2 else 1
+            padded = rows + (-rows) % BLOCK_ROWS
+            dense += rows * cols * jnp.dtype(leaf.dtype).itemsize
+            if self.method == "dense" or self.wire == "independent":
+                continue
+            # the diana wire psums f32 deltas; 'q' slabs travel at leaf dtype
+            slab_item = 4 if self.method == "diana" else jnp.dtype(
+                leaf.dtype).itemsize
+            nb, kb = self._wire_geometry(padded, self.fraction)
+            if self.client_axes:
+                intra += kb * BLOCK_ROWS * cols * slab_item
+            if self.pod_axes and self.pod_size > 1:
+                nb, kb = self._wire_geometry(padded, self._pod_fraction)
+                inter += kb * BLOCK_ROWS * cols * slab_item
+        if self.method != "dense" and self.wire == "independent":
+            intra = dense if self.client_axes else 0
+            inter = dense if (self.pod_axes and self.pod_size > 1) else 0
+        return {"dense": dense, "intra_pod": intra, "inter_pod": inter}

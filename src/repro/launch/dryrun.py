@@ -45,17 +45,24 @@ from repro.models import transformer
 
 
 def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
-                 ce: str = "gather", seq_shard: bool = True):
+                 ce: str = "gather", seq_shard: bool = True,
+                 local_steps: int = 1):
     """Lower + compile the step this shape exercises for config `cfg`."""
     specs = input_specs(cfg, shape)
     if shape.kind == "train":
         jitted, abstract, shardings, _ = steps.make_train_step(
             cfg, mesh, agg=agg, remat=remat, unroll=unroll, ce=ce,
-            seq_shard=seq_shard
+            seq_shard=seq_shard, local_steps=local_steps
         )
+        batch = specs["batch"]
+        if local_steps > 1:  # local_steps micro-batches per client, row-major
+            batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (s.shape[0] * local_steps,) + s.shape[1:], s.dtype),
+                batch)
         key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
         with compat.set_mesh(mesh):
-            lowered = jitted.lower(abstract, specs["batch"], key)
+            lowered = jitted.lower(abstract, batch, key)
     elif shape.kind == "prefill":
         prefill, lower_args = steps.make_prefill_step(
             cfg, mesh, cache_len=shape.seq_len, remat=remat, unroll=unroll
@@ -89,7 +96,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                agg_method: str = "diana", agg_wire: str = "shared",
                fraction: float = 0.02, remat="full", ce: str = "gather",
                seq_shard: bool = True, probes: bool = True,
-               extra_tags: dict | None = None):
+               local_steps: int = 1, extra_tags: dict | None = None):
     """Lower + compile one (arch, shape, mesh). Returns a result dict.
 
     Protocol (DESIGN.md §6): the FULL-depth model is compiled with the
@@ -119,7 +126,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     flags.set_unroll_inner_scans(False)
     compiled_full = _compile_one(cfg, shape, mesh, agg, remat=remat,
-                                 unroll=False, ce=ce, seq_shard=seq_shard)
+                                 unroll=False, ce=ce, seq_shard=seq_shard,
+                                 local_steps=local_steps)
     t_full = time.time() - t0
     mem = memory_summary(compiled_full)
     roof_scan = roofline_from_compiled(compiled_full, n_dev)
@@ -135,6 +143,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
         "remat": str(remat),
         "ce": ce,
         "seq_shard": seq_shard,
+        "local_steps": local_steps,
         "compile_s": round(t_full, 1),
         "memory": mem,
         "roofline_scan_raw": roof_scan.as_dict(),
@@ -151,7 +160,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
             for k in (1, 2):
                 ck = _compile_one(_probe_cfg(cfg, k), shape, mesh, agg,
                                   remat=remat, unroll=True, ce=ce,
-                                  seq_shard=seq_shard)
+                                  seq_shard=seq_shard,
+                                  local_steps=local_steps)
                 probes_raw[k] = roofline_from_compiled(ck, n_dev)
                 result.setdefault("top_collectives", {})[k] = [
                     (f"{b:.3e}", kind, shp)
@@ -197,6 +207,8 @@ def main(argv=None):
     ap.add_argument("--ce", default="gather", choices=("streaming", "gather"))
     ap.add_argument("--seq-shard", dest="seq_shard", action="store_true", default=True)
     ap.add_argument("--no-seq-shard", dest="seq_shard", action="store_false")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="NASTYA local mini-epochs per round (pod granularity)")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the unrolled depth probes (report raw scan "
                          "cost terms, which count loop bodies once)")
@@ -218,7 +230,7 @@ def main(argv=None):
                     arch, shape, multi_pod=multi, agg_method=args.agg,
                     agg_wire=args.wire, fraction=args.fraction,
                     remat=args.remat, ce=args.ce, seq_shard=args.seq_shard,
-                    probes=not args.no_probes,
+                    probes=not args.no_probes, local_steps=args.local_steps,
                     extra_tags={"tag": args.tag} if args.tag else None,
                 )
             except Exception as e:  # a dry-run failure is a sharding bug

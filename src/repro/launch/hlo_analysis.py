@@ -138,6 +138,8 @@ def roofline_from_compiled(compiled, n_devices: int) -> Roofline:
     """Roofline terms from a compiled executable. cost_analysis() on this
     JAX/XLA build reports PER-DEVICE flops/bytes (verified in DESIGN.md §6)."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jaxlibs wrap the dict
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     stats = collective_stats(compiled.as_text())

@@ -44,3 +44,18 @@ def client_axes(mesh) -> tuple[str, ...]:
 
 def num_clients(mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in client_axes(mesh)]))
+
+
+def pod_axes(mesh) -> tuple[str, ...]:
+    """The outer (inter-pod) wire axes — present only on multi-pod meshes."""
+    return ("pod",) if "pod" in mesh.axis_names else ()
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The inner (intra-pod) client axes: everything but TP and "pod"."""
+    return tuple(n for n in mesh.axis_names if n not in ("model", "pod"))
+
+
+def num_pods(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in pod_axes(mesh)])) if pod_axes(
+        mesh) else 1

@@ -99,6 +99,18 @@ def shifts_specs(params, client_axes: tuple[str, ...], *, mesh=None) -> Any:
     return jax.tree_util.tree_map_with_path(shift_spec, params)
 
 
+def podded_specs(params, pod_axes: tuple[str, ...], *, mesh=None) -> Any:
+    """Per-pod state (level-2 DIANA shifts, per-pod mean shifts, local NASTYA
+    params): leading pod axis + the leaf's own TP spec."""
+    msize = _model_size(mesh)
+
+    def spec(path, leaf):
+        base = _leaf_spec(path, leaf, msize)
+        return P(pod_axes, *base)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
 def batch_specs(batch, client_axes: tuple[str, ...]) -> Any:
     return jax.tree.map(lambda x: P(client_axes, *(None,) * (x.ndim - 1)), batch)
 

@@ -2,16 +2,26 @@
 
 `make_train_step` is where the paper's contribution meets the pod:
 
-  - the mesh's ("pod","data") ranks are the M federated clients;
-  - each client computes its LOCAL gradient inside a partial-manual
-    `jax.shard_map` (manual over the client axes, GSPMD/auto over "model" —
-    so the transformer's tensor parallelism is compiler-managed while the
-    paper's per-client compression semantics are explicit);
-  - `CompressedAggregation` (core/dist.py) compresses, all-reduces the
-    k-row slabs over the client axes (Q-RR / DIANA-RR wire), and returns the
-    descent direction;
-  - the server update is plain SGD with stepsize gamma (Algorithms 2-3; an
-    AdamW variant is available for the beyond-paper examples).
+  - the mesh's ("pod","data") ranks are the M federated clients; per-client
+    gradients are computed under GSPMD (`jax.vmap` over the stacked client
+    batch, "model" tensor parallelism compiler-managed);
+  - the WIRE — compression, shift updates, and the sparse collectives — runs
+    in a fully-manual `jax.shard_map` over every mesh axis, so the paper's
+    per-client semantics are explicit and nothing depends on the partial-auto
+    shard_map path (which miscompiles on the pinned 0.4.x JAX: GSPMD emits
+    malformed tile assignments for replicated inputs of a partial-manual
+    region — see ROADMAP "launch layer" history);
+  - `CompressedAggregation` (core/dist.py) is hierarchical: the "data" axis
+    inside a pod runs the kernelized shared Rand-block psum and the "pod"
+    axis runs a second, independently-keyed compressed exchange with its own
+    DIANA shifts (DESIGN.md §3.6);
+  - with `local_steps > 1` the step is the paper's Q-NASTYA / DIANA-NASTYA
+    (Algorithms 4-5) at pod granularity: each pod runs `local_steps` local
+    RR mini-epochs at stepsize `lr` (gamma), the epoch gradient
+    (x_t - x^n) / (gamma * n) crosses the inter-pod wire once, and the
+    server update reuses `optim` at the server stepsize `eta`;
+  - the server update is plain SGD (Algorithms 2-5; momentum/AdamW are the
+    beyond-paper variants, state replicated over clients, TP over model).
 
 `make_prefill_step` / `make_serve_step` are pure-GSPMD inference paths (no
 client wire — serving has no gradients to compress).
@@ -29,7 +39,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dist import CompressedAggregation, DianaState
 from repro.launch import compat, sharding
-from repro.launch.mesh import client_axes as _client_axes, num_clients
+from repro.launch.mesh import (
+    client_axes as _client_axes,
+    data_axes as _data_axes,
+    num_clients,
+    num_pods,
+    pod_axes as _pod_axes,
+)
 from repro.models import transformer
 from repro.models.config import ArchConfig
 from repro.optim import optimizers as optim
@@ -37,10 +53,40 @@ from repro.optim import optimizers as optim
 
 class TrainState(NamedTuple):
     params: Any
-    shifts: Any  # (M, *param_shape) per-client DIANA shifts, or None
-    mean_shift: Any  # param-shaped running mean shift H_t, or None
+    shifts: Any  # (M, *param) intra-pod DIANA shifts, or None
+    mean_shift: Any  # per-pod mean shift: (P, *param) on pod meshes, else (*param)
     step: jax.Array
     opt_state: Any = ()  # server optimizer state (paper uses plain SGD)
+    pod_shifts: Any = None  # (P, *param) inter-pod DIANA shifts, or None
+    pod_mean_shift: Any = None  # (*param) global mean of pod shifts, or None
+
+
+def configure_agg(agg: CompressedAggregation, mesh,
+                  local_steps: int = 1) -> CompressedAggregation:
+    """Bind an aggregation config to a mesh's wire topology.
+
+    - multi-pod mesh: inner level over the in-pod "data" ranks, outer level
+      over "pod" (the two-level wire, DESIGN.md §3.6);
+    - flat mesh with local steps: every client is its own pod (paper
+      Algorithms 4-5 exactly — no intra-pod wire, one compressed exchange
+      per epoch over the client axes);
+    - flat mesh, no local steps: the single-level wire, unchanged.
+    """
+    if _pod_axes(mesh):
+        return dataclasses.replace(
+            agg, client_axes=_data_axes(mesh), pod_axes=_pod_axes(mesh),
+            pod_size=num_pods(mesh))
+    if local_steps > 1:
+        return dataclasses.replace(
+            agg, client_axes=(), pod_axes=_client_axes(mesh),
+            pod_size=num_clients(mesh))
+    return dataclasses.replace(agg, client_axes=_client_axes(mesh),
+                               pod_axes=(), pod_size=1)
+
+
+def _outer_ranks(agg: CompressedAggregation) -> int:
+    """Number of outer-level ranks ("pods"): pod_size when hierarchical."""
+    return agg.pod_size if agg.pod_axes else 1
 
 
 # ---------------------------------------------------------------------------
@@ -58,61 +104,78 @@ def _make_optimizer(optimizer: str, lr: float) -> optim.Optimizer:
 
 
 def init_train_state(key, cfg: ArchConfig, agg: CompressedAggregation,
-                     m: int, *, optimizer: str = "sgd",
-                     lr: float = 3e-3) -> TrainState:
+                     m: int, *, optimizer: str = "sgd", lr: float = 3e-3,
+                     mesh=None, local_steps: int = 1) -> TrainState:
+    """Initial state. Pass `mesh` (and `local_steps`) so the DIANA shift
+    tables get the mesh's wire topology; without it `agg` is used as-is
+    (correct for flat single-level meshes, the pre-pod behaviour)."""
+    if mesh is not None:
+        agg = configure_agg(agg, mesh, local_steps)
     params = transformer.init_params(key, cfg)
-    shifts = mean_shift = None
+    shifts = mean_shift = pod_shifts = pod_mean_shift = None
     if agg.method == "diana":
-        shifts = jax.tree.map(
-            lambda p: jnp.zeros((m,) + p.shape, agg.shift_dtype), params
-        )
-        mean_shift = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, agg.shift_dtype), params
-        )
+        zeros = lambda shape: jnp.zeros(shape, agg.shift_dtype)
+        n_pods_ = _outer_ranks(agg)
+        if agg.client_axes:
+            shifts = jax.tree.map(lambda p: zeros((m,) + p.shape), params)
+            mean_shift = jax.tree.map(
+                lambda p: zeros(((n_pods_,) if agg.pod_axes else ()) + p.shape),
+                params)
+        if agg.pod_axes:
+            pod_shifts = jax.tree.map(
+                lambda p: zeros((n_pods_,) + p.shape), params)
+            pod_mean_shift = jax.tree.map(lambda p: zeros(p.shape), params)
     opt_state = _make_optimizer(optimizer, lr).init(params)
     return TrainState(params, shifts, mean_shift, jnp.zeros((), jnp.int32),
-                      opt_state)
+                      opt_state, pod_shifts, pod_mean_shift)
 
 
 def abstract_train_state(cfg: ArchConfig, agg: CompressedAggregation,
-                         m: int, *, optimizer: str = "sgd") -> TrainState:
+                         m: int, *, optimizer: str = "sgd", mesh=None,
+                         local_steps: int = 1) -> TrainState:
     return jax.eval_shape(
         lambda: init_train_state(jax.random.key(0), cfg, agg, m,
-                                 optimizer=optimizer)
+                                 optimizer=optimizer, mesh=mesh,
+                                 local_steps=local_steps)
     )
 
 
 def train_state_shardings(mesh, state: TrainState, agg) -> TrainState:
     caxes = _client_axes(mesh)
+    paxes = _pod_axes(mesh) or (agg.pod_axes if agg.pod_axes else ())
     ns = lambda spec: NamedSharding(mesh, spec)
     pspecs = sharding.param_specs(state.params, mesh=mesh)
-    def opt_spec(sub):
-        # mu/nu are param-shaped (model-TP); count replicated
-        return jax.tree.map(
-            lambda leaf: ns(sharding.param_specs(state.params, mesh=mesh)
-                            if False else P()), sub)
+
+    def maybe(tree, spec_tree):
+        return None if tree is None else jax.tree.map(ns, spec_tree)
+
+    # mean_shift is per-pod (leading pod axis) on hierarchical wires
+    podded = (sharding.podded_specs(state.params, paxes, mesh=mesh)
+              if paxes else None)
+    ms_specs = podded if (state.mean_shift is not None and agg.pod_axes) \
+        else pspecs
 
     # optimizer state: mu/nu shard like params, scalars replicated
     if state.opt_state == ():
         osh = ()
+    elif isinstance(state.opt_state, optim.AdamState):
+        osh = optim.AdamState(
+            mu=jax.tree.map(ns, pspecs), nu=jax.tree.map(ns, pspecs),
+            count=ns(P()))
+    elif (jax.tree.structure(state.opt_state)
+          == jax.tree.structure(state.params)):
+        osh = jax.tree.map(ns, pspecs)  # momentum: param-shaped
     else:
-        osh = jax.tree.map(
-            lambda leaf: ns(P()) if leaf.ndim == 0 else None, state.opt_state)
-        # replace param-shaped leaves with the matching param sharding
-        if isinstance(state.opt_state, optim.AdamState):
-            osh = optim.AdamState(
-                mu=jax.tree.map(ns, pspecs), nu=jax.tree.map(ns, pspecs),
-                count=ns(P()))
-        elif state.opt_state is not None:
-            osh = jax.tree.map(ns, sharding.param_specs(state.params, mesh=mesh))                 if jax.tree.structure(state.opt_state) == jax.tree.structure(state.params) else osh
+        osh = jax.tree.map(lambda _: ns(P()), state.opt_state)
     return TrainState(
         params=jax.tree.map(ns, pspecs),
-        shifts=None if state.shifts is None else jax.tree.map(
-            ns, sharding.shifts_specs(state.params, caxes, mesh=mesh)
-        ),
-        mean_shift=None if state.mean_shift is None else jax.tree.map(ns, pspecs),
+        shifts=maybe(state.shifts,
+                     sharding.shifts_specs(state.params, caxes, mesh=mesh)),
+        mean_shift=maybe(state.mean_shift, ms_specs),
         step=ns(P()),
         opt_state=osh,
+        pod_shifts=maybe(state.pod_shifts, podded),
+        pod_mean_shift=maybe(state.pod_mean_shift, pspecs),
     )
 
 
@@ -121,91 +184,246 @@ def train_state_shardings(mesh, state: TrainState, agg) -> TrainState:
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
-                    lr: float = 3e-3, remat="full", unroll: bool = False,
+                    lr: float = 3e-3, eta: float | None = None,
+                    local_steps: int = 1, remat="full", unroll: bool = False,
                     ce: str = "gather", seq_shard: bool = True,
                     optimizer: str = "sgd"):
     """Returns jitted (state, batch, key) -> (state, metrics).
+
+    lr: the client/local stepsize gamma. With `local_steps == 1` it is also
+    the server stepsize (Algorithms 2-3). With `local_steps > 1` the step is
+    NASTYA at pod granularity (Algorithms 4-5): `eta` is the server stepsize
+    applied to the epoch gradient (default gamma * local_steps, which makes
+    Q-NASTYA degrade to FedRR per the Corollary 3 remark); the batch must
+    carry `local_steps` micro-batches per client, client-major
+    (leading dim = M * local_steps * b).
 
     optimizer: the SERVER update applied to the aggregated direction —
     "sgd" is the paper's Algorithms 2-5; "momentum"/"adamw" are the
     beyond-paper variants (state replicated over clients, TP over model).
     """
-    caxes = _client_axes(mesh)
-    agg = dataclasses.replace(agg, client_axes=caxes)
-    opt = _make_optimizer(optimizer, lr)
+    if eta is not None and local_steps == 1:
+        raise ValueError("eta is the NASTYA server stepsize and requires "
+                         "local_steps > 1 (with one local step the server "
+                         "stepsize IS lr; Algorithms 2-3)")
+    mcaxes = _client_axes(mesh)
+    m = num_clients(mesh)
+    agg = configure_agg(agg, mesh, local_steps)
+    n_pods_ = _outer_ranks(agg)
+    clients_per_pod = m // n_pods_
+    gamma = lr
+    server_lr = (eta if eta is not None else gamma * local_steps) \
+        if local_steps > 1 else lr
+    opt = _make_optimizer(optimizer, server_lr)
     loss_fn = partial(transformer.loss_fn, cfg=cfg, remat=remat,
                       unroll=unroll, ce=ce, seq_shard=seq_shard)
+    diana = agg.method == "diana"
 
-    def client_fn(state: TrainState, batch, key):
-        # per-client slice of the shift table: (1, *shape) -> (*shape)
-        local_shifts = (
-            None if state.shifts is None
-            else jax.tree.map(lambda s: s[0], state.shifts)
-        )
-        loss, g = jax.value_and_grad(loss_fn)(state.params, batch)
-        dstate = (
-            DianaState(local_shifts, state.mean_shift)
-            if agg.method == "diana" else None
-        )
-        direction, new_dstate = agg.aggregate(
-            g, dstate, jax.random.fold_in(key, state.step)
-        )
+    abstract = abstract_train_state(cfg, agg, m, optimizer=optimizer,
+                                    mesh=mesh, local_steps=local_steps)
+    pspecs = sharding.param_specs(abstract.params, mesh=mesh)
+    stacked_specs = jax.tree.map(lambda s: P(mcaxes, *s), pspecs)
+    pod_axis = agg.pod_axes  # leading axis of per-pod trees
+    podded_specs = (sharding.podded_specs(abstract.params, pod_axis,
+                                          mesh=mesh)
+                    if pod_axis else pspecs)
+    all_axes = set(mesh.axis_names)
+
+    def manual(f, in_specs, out_specs):
+        """Fully-manual shard_map (every axis manual) — the wire region."""
+        return compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, axis_names=all_axes,
+                                check_vma=False)
+
+    # spec trees matching the (possibly None) state fields
+    def tspec(tree, spec_tree):
+        return None if tree is None else spec_tree
+    shifts_sp = tspec(abstract.shifts, stacked_specs)
+    ms_sp = tspec(abstract.mean_shift,
+                  podded_specs if pod_axis else pspecs)
+    psh_sp = tspec(abstract.pod_shifts, podded_specs)
+    pms_sp = tspec(abstract.pod_mean_shift, pspecs)
+
+    strip = lambda t: None if t is None else jax.tree.map(lambda x: x[0], t)
+    stack = lambda t: None if t is None else jax.tree.map(
+        lambda x: x[None], t)
+    strip_pod = strip if pod_axis else (lambda t: t)
+    stack_pod = stack if pod_axis else (lambda t: t)
+
+    def grads_and_loss(params_stacked, batch_c):
+        """Per-client (loss, grad) under GSPMD: vmap over the client dim."""
+        return jax.vmap(
+            lambda p, b: jax.value_and_grad(loss_fn)(p, b)
+        )(params_stacked, batch_c)
+
+    def broadcast_clients(tree):
+        """params -> (M, *shape) client-stacked view (replication, no copy
+        per device: the leading dim shards over the client axes)."""
+        out = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (m,) + p.shape), tree)
+        return jax.lax.with_sharding_constraint(
+            out, jax.tree.map(lambda s: NamedSharding(mesh, s), stacked_specs))
+
+    # -- wire regions (fully-manual shard_map bodies) --------------------------
+
+    def full_wire_fn(g, shifts, mean_shift, pod_shifts, pod_mean_shift, kd):
+        """Composed two-level exchange (the local_steps == 1 round)."""
+        g = strip(g)
+        dstate = DianaState(strip(shifts), strip_pod(mean_shift),
+                            strip_pod(pod_shifts), pod_mean_shift) \
+            if diana else None
+        direction, nd = agg.aggregate(g, dstate, jax.random.wrap_key_data(kd))
+        if diana:
+            return (direction, stack(nd.shifts), stack_pod(nd.mean_shift),
+                    stack_pod(nd.pod_shifts), nd.pod_mean_shift)
+        return direction, shifts, mean_shift, pod_shifts, pod_mean_shift
+
+    full_wire = manual(
+        full_wire_fn,
+        in_specs=(stacked_specs, shifts_sp, ms_sp, psh_sp, pms_sp, P()),
+        out_specs=(pspecs, shifts_sp, ms_sp, psh_sp, pms_sp),
+    )
+
+    def local_wire_fn(g, shifts, mean_shift, kd):
+        """Inner (intra-pod) exchange — one NASTYA local step's psum."""
+        g = strip(g)
+        dstate = DianaState(strip(shifts), strip_pod(mean_shift)) \
+            if diana else None
+        direction, nd = agg.aggregate_local(g, dstate,
+                                            jax.random.wrap_key_data(kd))
+        new_shifts, new_ms = (stack(nd.shifts), stack_pod(nd.mean_shift)) \
+            if diana else (shifts, mean_shift)
+        # direction is identical on every rank of a pod; emit the pod block
+        # (local_wire only exists on NASTYA paths, where pod_axis is set)
+        return stack(direction), new_shifts, new_ms
+
+    local_wire = manual(
+        local_wire_fn,
+        in_specs=(stacked_specs, shifts_sp, ms_sp, P()),
+        out_specs=(podded_specs, shifts_sp, ms_sp),
+    )
+
+    def pod_wire_fn(g_pod, pod_shifts, pod_mean_shift, kd):
+        """Outer (inter-pod) exchange of the NASTYA epoch gradient."""
+        g = strip_pod(g_pod) if pod_axis else strip(g_pod)
+        dstate = DianaState(None, None, strip_pod(pod_shifts),
+                            pod_mean_shift) if diana else None
+        direction, nd = agg.aggregate_pod(g, dstate,
+                                          jax.random.wrap_key_data(kd))
+        if diana:
+            return direction, stack_pod(nd.pod_shifts), nd.pod_mean_shift
+        return direction, pod_shifts, pod_mean_shift
+
+    pod_wire = manual(
+        pod_wire_fn,
+        in_specs=(podded_specs, psh_sp, pms_sp, P()),
+        out_specs=(pspecs, psh_sp, pms_sp),
+    )
+
+    # -- the step ---------------------------------------------------------------
+
+    def nastya_epoch(state: TrainState, batch, rkey):
+        """local_steps local RR mini-epochs per pod + one inter-pod round."""
+        bsz = jax.tree.leaves(batch)[0].shape[0] // (m * local_steps)
+        batch_r = jax.tree.map(
+            lambda x: x.reshape((m, local_steps, bsz) + x.shape[1:]), batch)
+        bspecs = jax.tree.map(
+            lambda x: P(mcaxes, *(None,) * (x.ndim - 1)), batch_r)
+
+        def permute_fn(b, kd):
+            # per-pod RR order over the local micro-epochs (Alg. 4 line 5);
+            # device-local gather — every rank of a pod draws the same order
+            key = jax.random.wrap_key_data(kd)
+            for ax in pod_axis:
+                key = jax.random.fold_in(key, lax.axis_index(ax))
+            perm = jax.random.permutation(key, local_steps)
+            return jax.tree.map(lambda x: x[:, perm], b)
+
+        batch_r = manual(permute_fn, in_specs=(bspecs, P()),
+                         out_specs=bspecs)(
+            batch_r, jax.random.key_data(jax.random.fold_in(rkey, 1)))
+        xs = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), batch_r)
+
+        x_pods = jax.lax.with_sharding_constraint(
+            jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (n_pods_,) + p.shape),
+                state.params),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), podded_specs))
+
+        def body(carry, inp):
+            x, shifts, mean_shift = carry
+            batch_j, t = inp
+            x_clients = jax.lax.with_sharding_constraint(
+                jax.tree.map(
+                    lambda p: jnp.repeat(p, clients_per_pod, axis=0), x),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), stacked_specs))
+            losses, g = grads_and_loss(x_clients, batch_j)
+            kd = jax.random.key_data(jax.random.fold_in(rkey, 2 + t))
+            direction, shifts, mean_shift = local_wire(
+                g, shifts, mean_shift, kd)
+            x = jax.tree.map(
+                lambda xi, d: (xi.astype(jnp.float32)
+                               - gamma * d.astype(jnp.float32)
+                               ).astype(xi.dtype), x, direction)
+            return (x, shifts, mean_shift), jnp.mean(losses)
+
+        (x_pods, new_shifts, new_ms), losses = lax.scan(
+            body, (x_pods, state.shifts, state.mean_shift),
+            (xs, jnp.arange(local_steps)))
+
+        # g_pod = (x_t - x_t^n) / (gamma * n)   (Alg. 4/5 line 7)
+        g_pod = jax.tree.map(
+            lambda p, xn: (p[None].astype(jnp.float32)
+                           - xn.astype(jnp.float32))
+            / (gamma * local_steps), state.params, x_pods)
+        direction, new_psh, new_pms = pod_wire(
+            g_pod, state.pod_shifts, state.pod_mean_shift,
+            jax.random.key_data(rkey))
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(g_pod)) / n_pods_)
+        return (direction, new_shifts, new_ms, new_psh, new_pms,
+                jnp.mean(losses), gnorm)
+
+    def flat_round(state: TrainState, batch, rkey):
+        """One communication round (Algorithms 2-3 / the composed wire)."""
+        bsz = jax.tree.leaves(batch)[0].shape[0] // m
+        batch_c = jax.tree.map(
+            lambda x: x.reshape((m, bsz) + x.shape[1:]), batch)
+        losses, g = grads_and_loss(broadcast_clients(state.params), batch_c)
+        direction, new_shifts, new_ms, new_psh, new_pms = full_wire(
+            g, state.shifts, state.mean_shift, state.pod_shifts,
+            state.pod_mean_shift, jax.random.key_data(rkey))
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(g)) / m)
+        return (direction, new_shifts, new_ms, new_psh, new_pms,
+                jnp.mean(losses), gnorm)
+
+    def step(state: TrainState, batch, key):
+        rkey = jax.random.fold_in(key, state.step)
+        round_fn = nastya_epoch if local_steps > 1 else flat_round
+        (direction, new_shifts, new_ms, new_psh, new_pms, loss,
+         gnorm) = round_fn(state, batch, rkey)
         updates, new_opt = opt.update(
             jax.tree.map(lambda d: d.astype(jnp.float32), direction),
             state.opt_state, state.params)
         new_params = optim.apply_updates(state.params, updates)
-        gnorm = jnp.sqrt(lax.pmean(
-            sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                for x in jax.tree.leaves(g)), caxes))
-        metrics = {
-            "loss": lax.pmean(loss, caxes),
-            "grad_norm": gnorm,
-        }
-        if agg.method == "diana":
-            new_shifts = jax.tree.map(lambda s: s[None], new_dstate.shifts)
-            new_mean = new_dstate.mean_shift
-        else:
-            new_shifts, new_mean = state.shifts, state.mean_shift
-        return TrainState(new_params, new_shifts, new_mean, state.step + 1,
-                          new_opt), metrics
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return TrainState(new_params, new_shifts, new_ms, state.step + 1,
+                          new_opt, new_psh, new_pms), metrics
 
-    state_manual_specs = TrainState(
-        params=P(),
-        shifts=P(caxes),  # leading client axis is the manual slice
-        mean_shift=P(),
-        step=P(),
-        opt_state=P(),  # server state: identical on every client
-    )
-    mapped = compat.shard_map(
-        client_fn,
-        mesh=mesh,
-        in_specs=(state_manual_specs, P(caxes), P()),
-        out_specs=(state_manual_specs, P()),
-        axis_names=set(caxes),
-        check_vma=False,
-    )
-
-    def step(state: TrainState, batch, key):
-        return mapped(state, batch, key)
-
-    abstract = abstract_train_state(cfg, agg, num_clients(mesh),
-                                    optimizer=optimizer)
     shardings = train_state_shardings(mesh, abstract, agg)
     batch_sh = lambda batch: jax.tree.map(
-        lambda x: NamedSharding(mesh, P(caxes, *(None,) * (x.ndim - 1))), batch
-    )
+        lambda x: NamedSharding(mesh, P(mcaxes, *(None,) * (x.ndim - 1))),
+        batch)
     jitted = jax.jit(
         step,
-        in_shardings=(tuple_to_state(shardings), None, None),
-        out_shardings=(tuple_to_state(shardings), None),
+        in_shardings=(shardings, None, None),
+        out_shardings=(shardings, None),
         donate_argnums=(0,),
     )
     return jitted, abstract, shardings, batch_sh
-
-
-def tuple_to_state(x):
-    # NamedTuple passthrough (kept for call-site readability)
-    return x
 
 
 # ---------------------------------------------------------------------------

@@ -38,10 +38,20 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--lr", type=float, default=0.1,
+                    help="client/local stepsize gamma")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help=">1 runs Q-NASTYA/DIANA-NASTYA at pod granularity: "
+                         "that many local RR mini-epochs between rounds")
+    ap.add_argument("--eta", type=float, default=None,
+                    help="server stepsize for --local-steps>1 "
+                         "(default gamma*local_steps = FedRR equivalence)")
     ap.add_argument("--agg", choices=("diana", "q", "dense"), default="diana")
     ap.add_argument("--wire", choices=("shared", "independent"), default="shared")
     ap.add_argument("--fraction", type=float, default=0.05)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="CPU test-mesh pods: >1 builds a (pods, 4/pods, 2) "
+                         "('pod','data','model') mesh for the two-level wire")
     ap.add_argument("--optimizer", choices=("sgd", "momentum", "adamw"),
                     default="sgd")
     ap.add_argument("--sampling", choices=("rr", "rr_once", "wr"), default="rr")
@@ -54,6 +64,13 @@ def main():
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         cfg = get_config(args.arch)
+    elif args.pods > 1:
+        if args.pods not in (2, 4):
+            ap.error("--pods must be 1, 2 or 4 (the CPU test mesh has 4 "
+                     "client ranks to split into pods)")
+        mesh = make_test_mesh((args.pods, 4 // args.pods, 2),
+                              ("pod", "data", "model"))
+        cfg = reduced(get_config(args.arch), seq=args.seq)
     else:
         mesh = make_test_mesh((4, 2), ("data", "model"))
         cfg = reduced(get_config(args.arch), seq=args.seq)
@@ -63,11 +80,13 @@ def main():
                                 shift_dtype=jnp.float32)
     remat = "full" if args.production_mesh else False
     jitted, abstract, shardings, _ = steps.make_train_step(
-        cfg, mesh, agg=agg, lr=args.lr, remat=remat,
+        cfg, mesh, agg=agg, lr=args.lr, eta=args.eta,
+        local_steps=args.local_steps, remat=remat,
         optimizer=args.optimizer)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
     print(f"arch={cfg.name} ({n_params/1e6:.1f}M params) clients={m} "
-          f"agg={args.agg}/{args.wire} k/d={args.fraction} opt={args.optimizer}")
+          f"agg={args.agg}/{args.wire} k/d={args.fraction} "
+          f"local_steps={args.local_steps} opt={args.optimizer}")
 
     n_batches = 8
     data = synthetic_token_batches(
@@ -86,15 +105,31 @@ def main():
     with compat.set_mesh(mesh):
         state = jax.device_put(
             steps.init_train_state(jax.random.key(0), cfg, agg, m,
-                                   optimizer=args.optimizer), shardings)
+                                   optimizer=args.optimizer, mesh=mesh,
+                                   local_steps=args.local_steps), shardings)
         key = jax.random.key(1)
         t0 = time.time()
+        ls = args.local_steps
+
+        def micro_batch(c, g):  # g-th global micro-step of client c
+            e, i = divmod(g, n_batches)
+            return data[c, sampler.epoch_order(e)[c, i]]
+
+        def tile_extra(v):
+            # every batch leaf must be client-major (m * ls * b) rows: give
+            # each client ls copies of its own stub rows
+            b = v.shape[0] // m
+            v = v[:m * b].reshape((m, 1, b) + v.shape[1:])
+            return np.repeat(v, ls, axis=1).reshape((m * ls * b,) + v.shape[3:])
+
         for t in range(args.steps):
-            epoch, i = divmod(t, n_batches)
-            order = sampler.epoch_order(epoch)
-            tok = np.concatenate([data[c, order[c, i]] for c in range(m)], 0)
+            # client-major rows; ls micro-batches per client per call,
+            # consumed strictly in RR order across epoch boundaries
+            tok = np.concatenate(
+                [micro_batch(c, t * ls + j)
+                 for c in range(m) for j in range(ls)], 0)
             batch = {"tokens": jnp.asarray(tok)}
-            batch.update({k: jnp.asarray(v).astype(cfg.dtype)
+            batch.update({k: jnp.asarray(tile_extra(v)).astype(cfg.dtype)
                           for k, v in extras.items()})
             state, metrics = jitted(state, batch, key)
             if t % args.log_every == 0 or t == args.steps - 1:

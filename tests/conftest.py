@@ -14,6 +14,34 @@ import types
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import pytest
+
+
+@pytest.fixture
+def mesh_4x2():
+    """Flat single-pod mesh: 4 clients ("data") x 2-way TP ("model")."""
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture
+def mesh_2x2x2():
+    """Two-pod mesh: 2 pods x 2 in-pod clients ("data") x 2-way TP — the
+    smallest mesh that exercises BOTH levels of the hierarchical wire."""
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture
+def mesh_1x4x2():
+    """Single-pod mesh WITH a pod axis (size 1): the two-level wire code
+    path whose output must bit-match mesh_4x2's flat wire."""
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh((1, 4, 2), ("pod", "data", "model"))
+
 try:  # pragma: no cover - depends on the environment
     import hypothesis  # noqa: F401
 except ImportError:  # build a skip-only stand-in

@@ -13,14 +13,6 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-# partial-auto shard_map (manual client axes + GSPMD "model" axis) only
-# executes correctly on new JAX; the 0.4.x experimental `auto=` path trips a
-# GSPMD tile-assignment error on scalar inputs (ROADMAP "Open items").
-partial_auto_shard_map = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="partial-auto shard_map needs jax.shard_map (pinned 0.4.x lacks it)",
-)
-
 from repro.configs import get_config, reduced
 from repro.core.dist import CompressedAggregation
 from repro.launch import sharding, steps
@@ -108,7 +100,6 @@ def test_moe_specs():
     ("stablelm-1.6b", "diana"), ("qwen2-moe-a2.7b", "diana"),
     ("rwkv6-7b", "diana"), ("hymba-1.5b", "diana"),
 ])
-@partial_auto_shard_map
 @_subprocess_isolated
 def test_train_step_runs_sharded(arch, method):
     """Compressed train step on the 4x2 mesh: runs, loss finite + params
@@ -143,7 +134,6 @@ def test_train_step_runs_sharded(arch, method):
         assert delta > 0
 
 
-@partial_auto_shard_map
 @_subprocess_isolated
 def test_train_step_loss_decreases():
     cfg = reduced(get_config("stablelm-1.6b"), seq=S)

@@ -1,0 +1,325 @@
+"""Two-level (hierarchical) pod wire: parity, statistics, fixed point, and
+the NASTYA mapping's equivalence with the simulator (core/algorithms.py).
+
+All tests run the wire the way production does — inside a fully-manual
+shard_map over every mesh axis (core/dist.py docstring) — on the forced
+8-host-device session (conftest). Meshes come from the conftest fixtures:
+
+  mesh_4x2    flat wire          (4 clients x 2 TP)
+  mesh_1x4x2  two-level, 1 pod   (must bit-match mesh_4x2)
+  mesh_2x2x2  two-level, 2 pods  (both levels live)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import CompressedAggregation, DianaState
+from repro.data.logreg import make_federated_logreg
+from repro.launch import compat
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 forced host devices"
+)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    return compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs,
+                            axis_names=set(mesh.axis_names), check_vma=False)
+
+
+GRADS = {
+    "w": jnp.arange(4 * 64, dtype=jnp.float32).reshape(4, 64) / 100.0,
+    "b": jnp.ones((4, 8), jnp.float32),
+}
+MEAN = jax.tree.map(lambda x: x.mean(0), GRADS)
+
+
+def _wire_specs(mesh, grads):
+    """Stacked-client specs for `grads` on `mesh`: leading dim = all client
+    ranks, trailing dim TP when it divides."""
+    caxes = tuple(n for n in mesh.axis_names if n != "model")
+    msize = int(mesh.shape["model"])
+    return jax.tree.map(
+        lambda x: P(caxes, *(None,) * (x.ndim - 2),
+                    "model" if x.shape[-1] % msize == 0 else None), grads)
+
+
+def _configure(agg, mesh):
+    from repro.launch.steps import configure_agg
+
+    return configure_agg(agg, mesh)
+
+
+def _run_rounds(agg, mesh, rounds, *, grads=GRADS, seed=0):
+    """Last-round direction of `rounds` aggregate() calls (per-client fixed
+    gradients), executed inside the fully-manual wire region."""
+    agg = _configure(agg, mesh)
+    specs = _wire_specs(mesh, grads)
+
+    def body(g):
+        g = jax.tree.map(lambda x: x[0], g)
+        state = agg.init(g)
+        key = jax.random.PRNGKey(seed)
+
+        def one(state, t):
+            d, state = agg.aggregate(g, state, jax.random.fold_in(key, t))
+            return state, d
+
+        _, ds = jax.lax.scan(one, state, jnp.arange(rounds))
+        d = jax.tree.map(lambda x: x[-1], ds)
+        return jax.tree.map(lambda x: x[None], d)
+
+    out = jax.jit(_shard_map(body, mesh, (specs,), specs))(grads)
+    return jax.tree.map(lambda x: x[0], out)
+
+
+# ---------------------------------------------------------------------------
+# parity: 1-pod two-level == flat single-level, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["q", "diana"])
+def test_one_pod_two_level_bit_matches_flat(method, mesh_4x2, mesh_1x4x2):
+    """A single pod has no inter-pod link: the outer exchange is the exact
+    identity, and the inner exchange draws the very same keys as the flat
+    wire — the acceptance-criteria bit-match."""
+    agg = CompressedAggregation(method=method, wire="shared", fraction=0.25,
+                                shift_dtype=jnp.float32)
+    flat = _run_rounds(agg, mesh_4x2, 7)
+    two = _run_rounds(agg, mesh_1x4x2, 7)
+    for k in GRADS:
+        assert np.array_equal(np.asarray(flat[k]), np.asarray(two[k])), k
+
+
+def test_two_pod_wire_differs_from_flat(mesh_4x2, mesh_2x2x2):
+    """Sanity for the parity test: with 2 real pods the outer level draws
+    its own (salted) coordinates, so the wires must NOT coincide."""
+    agg = CompressedAggregation(method="q", wire="shared", fraction=0.25)
+    flat = _run_rounds(agg, mesh_4x2, 1)
+    two = _run_rounds(agg, mesh_2x2x2, 1)
+    assert any(
+        not np.array_equal(np.asarray(flat[k]), np.asarray(two[k]))
+        for k in GRADS
+    )
+
+
+# ---------------------------------------------------------------------------
+# statistics: unbiased, composed variance bound (1+w1)(1+w2)
+# ---------------------------------------------------------------------------
+
+def test_two_level_q_unbiased_with_composed_variance(mesh_2x2x2):
+    """E[Q2(Q1(x))] = x and E||Q2(Q1(x))||^2 <= (1+w1)(1+w2)||x||^2 (tower
+    rule over the two independent draws). Every client holds the same x so
+    the intra-pod mean is exactly Q1(x) and the bound is tight to sampling
+    error. ~1e4 seeded trials, like tests/test_kernels.py."""
+    trials = 10_000
+    agg = _configure(
+        CompressedAggregation(method="q", wire="shared", fraction=0.25),
+        mesh_2x2x2)
+    x = {"w": jnp.asarray(
+        np.random.default_rng(7).normal(size=(4, 64)), jnp.float32)}
+    x = {"w": jnp.broadcast_to(x["w"][:1], (4, 64))}  # same x on every client
+    specs = {"w": P(("pod", "data"), "model")}
+
+    def body(g):
+        g = jax.tree.map(lambda x: x[0], g)
+        key = jax.random.PRNGKey(3)
+
+        def one(acc, t):
+            d, _ = agg.aggregate(g, None, jax.random.fold_in(key, t))
+            s, s2 = acc
+            return (jax.tree.map(jnp.add, s, d),
+                    s2 + sum(jnp.sum(jnp.square(l))
+                             for l in jax.tree.leaves(d))), None
+
+        zeros = jax.tree.map(jnp.zeros_like, g)
+        (s, s2), _ = jax.lax.scan(one, (zeros, jnp.zeros(())),
+                                  jnp.arange(trials))
+        return jax.tree.map(lambda a: a[None] / trials, s), s2[None] / trials
+
+    mean_d, second_moment = jax.jit(
+        _shard_map(body, mesh_2x2x2, (specs,),
+                   (specs, P(("pod", "data"))))
+    )(x)
+    got = np.asarray(mean_d["w"][0])
+    want = np.asarray(x["w"][0])
+    # unbiased: montecarlo error ~ sqrt(omega_composed/trials) * |x|
+    scale = float(np.abs(want).max())
+    assert float(np.abs(got - want).max()) < 0.3 * scale + 0.02
+
+    omega1, omega2 = agg.omega(), agg.pod_omega()
+    bound = (1 + omega1) * (1 + omega2) * float(np.sum(want**2))
+    m2 = float(second_moment[0])
+    # the composed second moment sits near the bound (shared draws make it
+    # exact for identical clients) but must not exceed it beyond MC error
+    assert m2 < bound * 1.05, (m2, bound)
+    assert m2 > float(np.sum(want**2)) * (1 + omega2) * 0.95  # both levels real
+
+
+# ---------------------------------------------------------------------------
+# DIANA fixed point: pod-level shifts kill the inter-pod residual
+# ---------------------------------------------------------------------------
+
+def test_pod_shifts_drive_interpod_residual_to_zero(mesh_2x2x2):
+    """Fixed heterogeneous gradients from the paper's logreg problem: with
+    DIANA shifts at both levels the compressed residuals vanish and the
+    two-level direction converges to the exact global mean (Theorem 2 logic,
+    once per level)."""
+    prob = make_federated_logreg(m=4, n_batches=2, batch=4, d=64, cond=50.0,
+                                 seed=1)
+    loss = prob.loss_fn()
+    w0 = {"w": jnp.zeros((prob.d,), jnp.float32)}
+    # per-client full-batch gradient at w0 — maximally heterogeneous
+    grads = jax.vmap(
+        lambda a, y: jax.grad(loss)(w0, {"a": a.reshape(-1, prob.d),
+                                         "y": y.reshape(-1)})
+    )(prob.data["a"], prob.data["y"])["w"]  # (4, d)
+    grads = {"w": grads}
+    mean = np.asarray(grads["w"]).mean(0)
+
+    agg = CompressedAggregation(method="diana", wire="shared", fraction=0.25,
+                                shift_dtype=jnp.float32)
+    got = _run_rounds(agg, mesh_2x2x2,
+                      300, grads=grads)
+    np.testing.assert_allclose(np.asarray(got["w"]), mean, atol=1e-5)
+
+
+def test_one_level_alone_leaves_interpod_noise(mesh_2x2x2):
+    """Control for the fixed-point test: method 'q' (no shifts anywhere)
+    does NOT converge to the mean on the same problem — the shifts are what
+    kill the residual, not the averaging."""
+    prob = make_federated_logreg(m=4, n_batches=2, batch=4, d=64, cond=50.0,
+                                 seed=1)
+    loss = prob.loss_fn()
+    w0 = {"w": jnp.zeros((prob.d,), jnp.float32)}
+    grads = {"w": jax.vmap(
+        lambda a, y: jax.grad(loss)(w0, {"a": a.reshape(-1, prob.d),
+                                         "y": y.reshape(-1)})
+    )(prob.data["a"], prob.data["y"])["w"]}
+    mean = np.asarray(grads["w"]).mean(0)
+    agg = CompressedAggregation(method="q", wire="shared", fraction=0.25)
+    got = _run_rounds(agg, mesh_2x2x2, 300, grads=grads)
+    assert float(np.abs(np.asarray(got["w"]) - mean).max()) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# simulator-vs-pod cross-check: the production NASTYA step inherits the
+# simulator's (already theorem-tested) semantics
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs import get_config, reduced
+
+    cfg = reduced(get_config("stablelm-1.6b"), seq=8)
+    return dataclasses.replace(cfg, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("name", ["q_nastya", "diana_nastya"])
+def test_pod_nastya_matches_simulator(name, mesh_4x2):
+    """`q_nastya`/`diana_nastya` from core/algorithms.py and the pod-level
+    NASTYA step produce the same trajectory on a tiny problem: 4 clients
+    (each its own pod on the flat mesh — paper Algorithms 4-5 exactly),
+    full-batch (every local micro-batch identical, so the RR orders of the
+    two implementations cannot diverge), fraction=1.0 (both compressors are
+    exact at k=d, so the different Rand-k samplers coincide), same gamma/
+    eta/alpha. The production wire must inherit the simulator's semantics.
+    """
+    from repro.core.algorithms import init_algorithm, make_epoch_fn, ALGORITHMS
+    from repro.compression.ops import RandK
+    from repro.launch import steps
+    from repro.launch.mesh import num_clients
+    from repro.models import transformer
+
+    cfg = _tiny_cfg()
+    mesh = mesh_4x2
+    m = num_clients(mesh)
+    local_steps = 3
+    gamma, eta, alpha = 0.02, 0.05, 0.5
+    seq = 8
+
+    # one full-batch of tokens per client, repeated local_steps times
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, size=(m, 1, seq + 1))  # (M, b=1, S+1)
+    sim_data = {"tokens": jnp.asarray(
+        np.broadcast_to(tokens[:, None], (m, local_steps, 1, seq + 1)).copy(),
+        jnp.int32)}  # (M, n, b, S+1)
+
+    loss_fn = lambda p, b: transformer.loss_fn(p, b, cfg, remat=False,
+                                               seq_shard=False)
+    params0 = transformer.init_params(jax.random.key(0), cfg)
+
+    # --- simulator epochs ---------------------------------------------------
+    spec, epoch = make_epoch_fn(name, loss_fn, RandK(fraction=1.0),
+                                gamma=gamma, eta=eta, alpha=alpha)
+    sim = init_algorithm(ALGORITHMS[name], params0, m, local_steps)
+    ep = jax.jit(epoch)
+    for e in range(2):
+        sim = ep(sim, sim_data, jax.random.PRNGKey(10 + e))
+
+    # --- production pod step ------------------------------------------------
+    method = "diana" if name == "diana_nastya" else "q"
+    agg = CompressedAggregation(method=method, wire="shared", fraction=1.0,
+                                alpha=alpha, pod_alpha=alpha,
+                                shift_dtype=jnp.float32)
+    jitted, abstract, shardings, batch_sh = steps.make_train_step(
+        cfg, mesh, agg=agg, lr=gamma, eta=eta, local_steps=local_steps,
+        remat=False, seq_shard=False)
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m, lr=gamma,
+                                   mesh=mesh, local_steps=local_steps),
+            shardings)
+        # client-major rows, local_steps identical micro-batches per client
+        batch = {"tokens": jnp.asarray(
+            np.repeat(tokens[:, 0], local_steps, axis=0), jnp.int32)}
+        for e in range(2):
+            state, _ = jitted(state, batch, jax.random.key(10 + e))
+
+    # the two implementations compute identical math but with different
+    # reduction orders (single-device simulator vs 8-way sharded step);
+    # float noise grows chaotically along the trajectory — after 2 epochs
+    # the parameter updates are O(1e-2) and the divergence O(5e-5) (<1%)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(sim.params),
+            jax.tree_util.tree_leaves_with_path(state.params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=2e-4, rtol=2e-3, err_msg=str(pa))
+
+
+# ---------------------------------------------------------------------------
+# NASTYA on the two-level mesh: runs and trains
+# ---------------------------------------------------------------------------
+
+def test_nastya_two_pod_step_trains(mesh_2x2x2):
+    """End-to-end: 2 pods x 2 clients, 2 local RR mini-epochs per round,
+    DIANA at both levels — loss decreases over a few rounds."""
+    from repro.configs import get_config, reduced
+    from repro.launch import steps
+    from repro.launch.mesh import num_clients
+
+    cfg = reduced(get_config("stablelm-1.6b"), seq=8)
+    mesh = mesh_2x2x2
+    m = num_clients(mesh)
+    local_steps = 2
+    agg = CompressedAggregation(method="diana", wire="shared", fraction=0.5,
+                                shift_dtype=jnp.float32)
+    jitted, abstract, shardings, _ = steps.make_train_step(
+        cfg, mesh, agg=agg, lr=0.05, eta=0.2, local_steps=local_steps,
+        remat=False, seq_shard=False)
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m, mesh=mesh,
+                                   local_steps=local_steps), shardings)
+        batch = {"tokens": jax.random.randint(
+            jax.random.key(1), (m * local_steps * 2, 9), 0, cfg.vocab)}
+        losses = []
+        for _ in range(10):
+            state, metrics = jitted(state, batch, jax.random.key(2))
+            losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0] - 0.05, losses
