@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dist import CompressedAggregation
+from repro.data.pipeline import make_batch_stream
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
 from repro.launch import compat
@@ -58,7 +59,7 @@ def main():
     agg = CompressedAggregation(method=args.agg, wire="shared",
                                 fraction=args.fraction,
                                 shift_dtype=jnp.float32)
-    jitted, abstract, shardings, _ = steps.make_train_step(
+    jitted, abstract, shardings, batch_sh = steps.make_train_step(
         cfg, mesh, agg=agg, lr=args.lr, remat=False)
 
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
@@ -77,25 +78,23 @@ def main():
         state = jax.device_put(
             steps.init_train_state(jax.random.key(0), cfg, agg, m), shardings)
         key = jax.random.key(1)
-        order = sampler.epoch_order(0)
         t0 = time.time()
         first = last = None
-        for t in range(args.steps):
-            epoch, i = divmod(t, n_batches)
-            if i == 0:
-                order = sampler.epoch_order(epoch)
-            # batch leaves: (clients*local_batch, seq+1) stacked client-major
-            tok = np.concatenate(
-                [data[c, order[c, i]] for c in range(m)], axis=0)
-            batch = {"tokens": jnp.asarray(tok)}
-            state, metrics = jitted(state, batch, key)
-            if t % args.log_every == 0 or t == args.steps - 1:
-                loss = float(metrics["loss"])
-                first = first if first is not None else loss
-                last = loss
-                print(f"step {t:4d} | loss {loss:7.4f} | "
-                      f"gnorm {float(metrics['grad_norm']):8.3f} | "
-                      f"{(time.time()-t0)/(t+1):5.2f}s/step", flush=True)
+        # epoch-indexed RR stream: client-major rows, prefetch+device_put
+        # overlapped with the running step (data.pipeline, DESIGN.md §3.7)
+        stream = make_batch_stream(
+            {"tokens": data}, sampler,
+            put=lambda b: jax.device_put(b, batch_sh(b)))
+        with stream:
+            for t, batch in zip(range(args.steps), stream):
+                state, metrics = jitted(state, batch, key)
+                if t % args.log_every == 0 or t == args.steps - 1:
+                    loss = float(metrics["loss"])
+                    first = first if first is not None else loss
+                    last = loss
+                    print(f"step {t:4d} | loss {loss:7.4f} | "
+                          f"gnorm {float(metrics['grad_norm']):8.3f} | "
+                          f"{(time.time()-t0)/(t+1):5.2f}s/step", flush=True)
     print(f"loss: {first:.4f} -> {last:.4f} "
           f"({'DECREASED' if last < first - 0.05 else 'no significant change'})")
 

@@ -1,3 +1,8 @@
-from repro.checkpoint.io import load_pytree, restore_train_state, save_pytree
+from repro.checkpoint.io import (
+    load_meta,
+    load_pytree,
+    restore_train_state,
+    save_pytree,
+)
 
-__all__ = ["save_pytree", "load_pytree", "restore_train_state"]
+__all__ = ["save_pytree", "load_pytree", "load_meta", "restore_train_state"]

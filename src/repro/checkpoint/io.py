@@ -28,9 +28,14 @@ def _tree_paths(tree):
     return paths, leaves, treedef
 
 
-def save_pytree(path: str, tree: Any, *, step: int | None = None) -> None:
+def save_pytree(path: str, tree: Any, *, step: int | None = None,
+                meta: dict | None = None) -> None:
+    """`meta`: optional JSON-serializable sidecar stored in the manifest —
+    the train loop checkpoints the data-pipeline cursor (epoch, step) and
+    sampler spec here so resume bit-reproduces the batch stream."""
     paths, leaves, _ = _tree_paths(tree)
-    manifest = {"version": _FORMAT_VERSION, "step": step, "leaves": []}
+    manifest = {"version": _FORMAT_VERSION, "step": step, "meta": meta,
+                "leaves": []}
     payload = []
     for p, leaf in zip(paths, leaves):
         arr = np.asarray(leaf)
@@ -53,6 +58,23 @@ def save_pytree(path: str, tree: Any, *, step: int | None = None) -> None:
     with os.fdopen(fd, "wb") as f:
         f.write(blob)
     os.replace(tmp, path)
+
+
+def load_meta(path: str) -> dict:
+    """Manifest sidecar only: {"step": ..., "meta": ...} without
+    materializing any leaf buffer — used to restore the data-pipeline cursor
+    before deciding how to rebuild the stream. Streams the msgpack map and
+    stops at the manifest entry (save_pytree packs it first), so a
+    production-size checkpoint costs one small read, not a full decode."""
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f)
+        for _ in range(unpacker.read_map_header()):
+            if unpacker.unpack() == "manifest":
+                manifest = json.loads(unpacker.unpack())
+                return {"step": manifest.get("step"),
+                        "meta": manifest.get("meta")}
+            unpacker.skip()
+    raise KeyError(f"{path}: no manifest entry — not a repro checkpoint")
 
 
 def load_pytree(path: str, like: Any) -> Any:

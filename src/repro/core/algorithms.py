@@ -125,10 +125,13 @@ def _sample_round_indices(spec: AlgoSpec, key, m: int, n: int) -> jax.Array:
 
 def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
                     alpha: float, backend: CompressionBackend,
-                    state: FedState, data, key) -> FedState:
+                    state: FedState, data, key, order=None) -> FedState:
     m, n = num_clients(data), num_batches(data)
     k_idx, k_comp = jax.random.split(key)
-    idx = _sample_round_indices(spec, k_idx, m, n)  # (M, n)
+    # the epoch's batch order: host-side pipeline (data.pipeline feeds the
+    # stateless ReshuffleSampler's matrix) or the on-device fallback draw
+    idx = order if order is not None else \
+        _sample_round_indices(spec, k_idx, m, n)  # (M, n)
     step_keys = jax.random.split(k_comp, n)
     arange_m = jnp.arange(m)
 
@@ -191,10 +194,11 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
 
 def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float,
                  alpha: float, backend: CompressionBackend,
-                 state: FedState, data, key) -> FedState:
+                 state: FedState, data, key, order=None) -> FedState:
     m, n = num_clients(data), num_batches(data)
     k_idx, k_comp = jax.random.split(key)
-    idx = _sample_round_indices(spec, k_idx, m, n)  # (M, n)
+    idx = order if order is not None else \
+        _sample_round_indices(spec, k_idx, m, n)  # (M, n)
 
     def client_run(params, client_data, order):
         def lstep(x, i):
@@ -249,8 +253,12 @@ def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
                   backend: str | CompressionBackend | None = None):
     """Return (spec, epoch_fn) for algorithm `name`.
 
-    epoch_fn(state, data, key) -> FedState runs one full data epoch
-    (n communication rounds for non-local methods, 1 for local methods).
+    epoch_fn(state, data, key, order=None) -> FedState runs one full data
+    epoch (n communication rounds for non-local methods, 1 for local
+    methods). `order` is an optional (M, n) batch-index matrix from the
+    host-side pipeline (`data.pipeline.run_epochs` passes the stateless
+    `ReshuffleSampler`'s epoch order — Shuffle-Once for DIANA-RR included);
+    without it the epoch draws its own on-device order per `spec.sampling`.
 
     `backend` selects the compression execution path ("reference" |
     "pallas"); default follows $REPRO_COMPRESSION_BACKEND, then "pallas"
@@ -272,13 +280,13 @@ def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
         eta = gamma  # caller should set for server-stepsize methods
 
     if spec.family == "nonlocal":
-        def epoch(state, data, key):
+        def epoch(state, data, key, order=None):
             return _nonlocal_epoch(spec, loss_fn, comp, gamma, alpha, be,
-                                   state, data, key)
+                                   state, data, key, order)
     else:
-        def epoch(state, data, key):
+        def epoch(state, data, key, order=None):
             return _local_epoch(spec, loss_fn, comp, gamma, eta, alpha, be,
-                                state, data, key)
+                                state, data, key, order)
 
     return spec, epoch
 

@@ -3,9 +3,12 @@
 The simulator treats the federated system exactly as the paper does:
 `M` clients, each holding `n` minibatches; communication rounds alternate
 client computation with (possibly compressed) aggregation. Everything is a
-pytree and every driver is a pure `epoch(state, data, key) -> state` function,
-so algorithms compose with jit/vmap/scan and run unchanged under
-`shard_map` (see `repro.core.dist` for the pod execution path).
+pytree and every driver is a pure `epoch(state, data, key, order=None) ->
+state` function, so algorithms compose with jit/vmap/scan and run unchanged
+under `shard_map` (see `repro.core.dist` for the pod execution path).
+`order` is the epoch's (M, n) batch-index matrix from the host-side
+pipeline (`repro.data.pipeline.run_epochs` — the same stateless sampler
+the production stream consumes); omitted, the driver draws on device.
 
 Data layout: a *client-stacked* pytree whose leaves have shape
 ``(M, n, *batch_shape)`` — M clients, n minibatches each (paper assumes equal

@@ -3,13 +3,27 @@ from repro.data.logreg import (
     make_federated_logreg,
     logreg_constants,
 )
+from repro.data.pipeline import (
+    BatchStream,
+    EpochIterator,
+    abstract_stream_batch,
+    make_batch_stream,
+    normalize_client_data,
+    run_epochs,
+)
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
 
 __all__ = [
+    "BatchStream",
+    "EpochIterator",
     "LogRegProblem",
-    "make_federated_logreg",
-    "logreg_constants",
     "ReshuffleSampler",
+    "abstract_stream_batch",
+    "logreg_constants",
+    "make_batch_stream",
+    "make_federated_logreg",
+    "normalize_client_data",
+    "run_epochs",
     "synthetic_token_batches",
 ]

@@ -1,0 +1,341 @@
+"""NASTYA-aware streaming data pipeline (DESIGN.md §3.7).
+
+This module owns everything the production loop used to hand-roll:
+
+  - the epoch-indexed RR order (`EpochIterator` over a stateless
+    `ReshuffleSampler`), consumed coherently ACROSS epoch boundaries — with
+    `local_steps > 1` a train step's micro-batches may straddle two epochs
+    and each side must come from its own epoch's permutation;
+  - client-major batch assembly: every leaf of the emitted batch has
+    `m * local_steps * b` leading rows, client-major, which is exactly the
+    contract of `launch.steps.make_train_step` — and EVERY leaf (tokens and
+    the VLM/audio modality stubs alike) is gathered through the same RR
+    index stream, so modalities stay row-aligned;
+  - uneven per-client dataset sizes with explicit drop-remainder semantics;
+  - host-side double-buffered prefetch: while the jit'd step runs batch t,
+    a single worker thread assembles (and `put`s — device transfer) batch
+    t+1, so input assembly stops serializing with the step;
+  - a checkpointable cursor `(epoch, step)` so a restored run bit-reproduces
+    the data stream from any point, mid-epoch included.
+
+The sampler side is pure numpy (permutations never need a device); anything
+jax-typed enters only through the caller-supplied `put` callable and the
+small simulator/dry-run helpers at the bottom.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.data.reshuffle import ReshuffleSampler
+
+PutFn = Callable[[dict], Any]
+
+
+# ---------------------------------------------------------------------------
+# client-stacked data normalization (uneven sizes, drop-remainder)
+# ---------------------------------------------------------------------------
+
+def _normalize_leaf(name: str, leaf, m: int):
+    """A leaf is either a stacked (m, n, b, ...) array or a length-m sequence
+    of per-client (n_c, b, ...) arrays (uneven datasets). Returns
+    (per-client views, per-client batch counts)."""
+    if isinstance(leaf, (list, tuple)):
+        views = [np.asarray(c) for c in leaf]
+    else:
+        arr = np.asarray(leaf)
+        if arr.ndim < 2:
+            raise ValueError(
+                f"leaf {name!r}: expected client-stacked (m, n, ...) data, "
+                f"got shape {arr.shape}")
+        views = [arr[c] for c in range(arr.shape[0])]
+    if len(views) != m:
+        raise ValueError(
+            f"leaf {name!r}: {len(views)} clients, sampler has {m}")
+    return views, [v.shape[0] for v in views]
+
+
+def normalize_client_data(data: Mapping[str, Any], m: int, *,
+                          drop_remainder: bool = True):
+    """Validate a client-stacked data dict and resolve a common per-client
+    batch count n.
+
+    drop_remainder=True: clients with more than min_c n_c batches have their
+    tail batches dropped (never sampled), keeping every client in lockstep —
+    the explicit analogue of the paper's equal-n assumption. With
+    drop_remainder=False uneven sizes are an error: pad the data instead
+    (the paper's code assigns the remainder to the last worker).
+
+    Returns (views, n): views[name] is a length-m list of (n_or_more, b, ...)
+    arrays, n the usable per-client batch count.
+    """
+    if not isinstance(data, Mapping) or not data:
+        raise ValueError("data must be a non-empty mapping of named leaves")
+    views: dict[str, list[np.ndarray]] = {}
+    counts: dict[str, list[int]] = {}
+    for name, leaf in data.items():
+        views[name], counts[name] = _normalize_leaf(name, leaf, m)
+    all_counts = {c for per_leaf in counts.values() for c in per_leaf}
+    n = min(all_counts)
+    if len(all_counts) > 1 and not drop_remainder:
+        raise ValueError(
+            f"uneven per-client batch counts {sorted(all_counts)} with "
+            "drop_remainder=False — pad every client to the same n (the "
+            "paper assigns the remainder to the last worker) or pass "
+            "drop_remainder=True to truncate to the minimum")
+    if n < 1:
+        raise ValueError("some client holds zero batches")
+    return views, n
+
+
+# ---------------------------------------------------------------------------
+# the epoch-indexed RR cursor
+# ---------------------------------------------------------------------------
+
+class EpochIterator:
+    """Walks a `ReshuffleSampler`'s order coherently across epochs.
+
+    The position is a single integer `g` — the per-client micro-step count
+    consumed so far (all clients advance in lockstep, one column of the
+    order matrix per micro-step). `(epoch, step) = divmod(g, n)` is the
+    checkpointable cursor; because the sampler is stateless, rebuilding an
+    iterator at any `g` replays the identical stream.
+    """
+
+    def __init__(self, sampler: ReshuffleSampler, *, start: int = 0):
+        if start < 0:
+            raise ValueError(f"start={start}")
+        self.sampler = sampler
+        self._g = int(start)
+        self._cached_epoch: int | None = None
+        self._order: np.ndarray | None = None
+
+    @property
+    def global_step(self) -> int:
+        return self._g
+
+    @property
+    def cursor(self) -> tuple[int, int]:
+        """(epoch, step-within-epoch) of the NEXT micro-step to be drawn."""
+        return divmod(self._g, self.sampler.n)
+
+    def _order_for(self, epoch: int) -> np.ndarray:
+        if epoch != self._cached_epoch:
+            self._order = self.sampler.epoch_order(epoch)
+            self._cached_epoch = epoch
+        return self._order
+
+    def take(self, count: int) -> np.ndarray:
+        """(M, count) batch indices for the next `count` micro-steps,
+        advancing the cursor. A call may straddle an epoch boundary: columns
+        before the boundary come from the old epoch's permutation, columns
+        after from the new one (RR-coherent mid-step rollover)."""
+        m = self.sampler.m
+        cols = np.empty((m, count), np.int32)
+        for j in range(count):
+            epoch, i = divmod(self._g + j, self.sampler.n)
+            cols[:, j] = self._order_for(epoch)[:, i]
+        self._g += count
+        return cols
+
+
+# ---------------------------------------------------------------------------
+# the stream
+# ---------------------------------------------------------------------------
+
+class BatchStream:
+    """Iterator of client-major `(m * local_steps * b)`-row train batches.
+
+    Each `next()` yields one train step's feed: for every client c, its
+    `local_steps` next RR micro-batches (in order), stacked client-major —
+    rows `[c*ls*b, (c+1)*ls*b)` belong to client c. All leaves are gathered
+    with the same index stream, so multi-modal rows stay aligned.
+
+    With `prefetch=True` (double buffering) the stream keeps exactly one
+    assembled batch in flight: `next()` returns the ready batch and hands
+    the following one to a worker thread (assembly + `put`), overlapping
+    host work and device transfer with the running step. Index columns are
+    always drawn on the calling thread, so the stream's order — and its
+    cursor — never depends on worker timing.
+    """
+
+    def __init__(self, data: Mapping[str, Any], sampler: ReshuffleSampler, *,
+                 local_steps: int = 1, put: PutFn | None = None,
+                 prefetch: bool = True, drop_remainder: bool = True,
+                 start_step: int = 0):
+        if local_steps < 1:
+            raise ValueError(f"local_steps={local_steps}")
+        self._views, n_avail = normalize_client_data(
+            data, sampler.m, drop_remainder=drop_remainder)
+        if sampler.n > n_avail:
+            raise ValueError(
+                f"sampler indexes {sampler.n} batches/client but the data "
+                f"holds only {n_avail} usable batches/client")
+        self.m = sampler.m
+        self.n = sampler.n  # batches beyond sampler.n are dropped remainder
+        self.local_steps = int(local_steps)
+        self._put = put
+        self._start_step = int(start_step)
+        self._consumed = 0  # train steps handed to the caller
+        self._it = EpochIterator(sampler, start=start_step * local_steps)
+        self._pool = ThreadPoolExecutor(max_workers=1) if prefetch else None
+        self._pending = None
+        self._closed = False
+
+    # -- cursor / checkpointing --------------------------------------------
+
+    @property
+    def step(self) -> int:
+        """Train steps consumed so far (including `start_step`)."""
+        return self._start_step + self._consumed
+
+    @property
+    def cursor(self) -> tuple[int, int]:
+        """(epoch, step-within-epoch) of the next UNCONSUMED micro-step —
+        prefetched-but-not-yet-returned batches don't count, so this is
+        always the right place to restart after a restore."""
+        return divmod(self.step * self.local_steps, self.n)
+
+    def cursor_meta(self) -> dict:
+        """JSON-serializable cursor + sampler spec, for the checkpoint
+        manifest. Resume with `make_batch_stream(..., start_step=
+        meta['train_step'])` after checking `sampler` matches."""
+        epoch, step = self.cursor
+        return {"train_step": self.step,
+                "global_micro_step": self.step * self.local_steps,
+                "epoch": epoch, "step": step,
+                "local_steps": self.local_steps,
+                "sampler": self._it.sampler.spec()}
+
+    # -- assembly ----------------------------------------------------------
+
+    def _assemble(self, cols: np.ndarray) -> dict:
+        """cols: (M, local_steps) batch indices -> client-major batch."""
+        ls = cols.shape[1]
+        out = {}
+        for name, views in self._views.items():
+            rows = [views[c][cols[c, j]]
+                    for c in range(self.m) for j in range(ls)]
+            out[name] = np.concatenate(rows, axis=0)
+        return out
+
+    def _assemble_put(self, cols: np.ndarray):
+        batch = self._assemble(cols)
+        return self._put(batch) if self._put is not None else batch
+
+    def _submit(self):
+        cols = self._it.take(self.local_steps)  # calling thread: order fixed
+        if self._pool is None:
+            return cols
+        return self._pool.submit(self._assemble_put, cols)
+
+    # -- iteration ---------------------------------------------------------
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise ValueError(
+                "BatchStream is closed (or died on a failed assemble/put) — "
+                "its cursor no longer matches the emitted batches; rebuild "
+                "the stream from the last checkpointed cursor")
+        try:
+            if self._pool is None:
+                out = self._assemble_put(self._submit())
+            else:
+                if self._pending is None:
+                    self._pending = self._submit()
+                ready, self._pending = self._pending, self._submit()
+                out = ready.result()
+        except BaseException:
+            # a failed assemble/put desyncs the iterator from the batches
+            # actually delivered: poison the stream rather than let a
+            # caught-and-retried next() silently skip a batch
+            self.close()
+            raise
+        self._consumed += 1
+        return out
+
+    def close(self):
+        self._closed = True
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+            self._pending = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def make_batch_stream(data: Mapping[str, Any], sampler: ReshuffleSampler, *,
+                      local_steps: int = 1, extras: Mapping[str, Any] | None = None,
+                      put: PutFn | None = None, prefetch: bool = True,
+                      drop_remainder: bool = True,
+                      start_step: int = 0) -> BatchStream:
+    """Build the production input stream.
+
+    data / extras: named client-stacked leaves — `(m, n, b, ...)` arrays or
+    length-m lists of `(n_c, b, ...)` arrays (uneven datasets; see
+    `normalize_client_data`). `extras` (VLM patches, audio frames, ...) are
+    merged into the same stream so every modality's rows are gathered by the
+    same RR indices as the tokens.
+
+    put: applied to each assembled host batch on the prefetch thread —
+    typically `lambda b: jax.device_put(b, batch_shardings(b))` so transfer
+    overlaps the running step.
+
+    start_step: first train step to emit (the checkpointed cursor's
+    `train_step`); the stream is identical to a fresh run that consumed
+    `start_step` steps.
+    """
+    if extras:
+        overlap = set(data) & set(extras)
+        if overlap:
+            raise ValueError(f"extras duplicate data leaves: {sorted(overlap)}")
+        data = {**data, **extras}
+    return BatchStream(data, sampler, local_steps=local_steps, put=put,
+                       prefetch=prefetch, drop_remainder=drop_remainder,
+                       start_step=start_step)
+
+
+# ---------------------------------------------------------------------------
+# simulator + dry-run entry points (the same order source, other consumers)
+# ---------------------------------------------------------------------------
+
+def run_epochs(epoch_fn, state, data, sampler: ReshuffleSampler, *,
+               epochs: int, key, start_epoch: int = 0, jit: bool = True):
+    """Drive a simulator epoch fn (`core.algorithms.make_epoch_fn`) through
+    the SAME stateless sampler as the production stream.
+
+    Each epoch e receives `sampler.epoch_order(e)` as its `order` argument
+    (replacing the on-device draw) and the key `fold_in(key, e)`, so the
+    trajectory is a pure function of `(state, data, sampler, key, e)`:
+    checkpointing `state` after epoch e-1 and calling again with
+    `start_epoch=e` bit-reproduces the uninterrupted run.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    ep = jax.jit(epoch_fn) if jit else epoch_fn
+    for e in range(start_epoch, start_epoch + epochs):
+        order = jnp.asarray(sampler.epoch_order(e))
+        state = ep(state, data, jax.random.fold_in(key, e), order)
+    return state
+
+
+def abstract_stream_batch(batch_struct, local_steps: int = 1):
+    """ShapeDtypeStructs of the stream's emitted batch, given one round's
+    per-client-major batch structs (leading dim m*b): the dry-run's view of
+    the batch contract (leading dim becomes m * local_steps * b)."""
+    import jax
+
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            (s.shape[0] * local_steps,) + s.shape[1:], s.dtype),
+        batch_struct)

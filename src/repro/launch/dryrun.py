@@ -32,6 +32,7 @@ from repro.configs import (
     shape_supported,
 )
 from repro.core.dist import CompressedAggregation
+from repro.data.pipeline import abstract_stream_batch
 from repro.launch import steps
 from repro.launch.hlo_analysis import (
     Roofline,
@@ -54,12 +55,9 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
             cfg, mesh, agg=agg, remat=remat, unroll=unroll, ce=ce,
             seq_shard=seq_shard, local_steps=local_steps
         )
-        batch = specs["batch"]
-        if local_steps > 1:  # local_steps micro-batches per client, row-major
-            batch = jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct(
-                    (s.shape[0] * local_steps,) + s.shape[1:], s.dtype),
-                batch)
+        # the batch contract of data.pipeline.make_batch_stream: client-major
+        # m * local_steps * b rows on every leaf
+        batch = abstract_stream_batch(specs["batch"], local_steps)
         key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
         with compat.set_mesh(mesh):
             lowered = jitted.lower(abstract, batch, key)

@@ -400,7 +400,27 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         return (direction, new_shifts, new_ms, new_psh, new_pms,
                 jnp.mean(losses), gnorm)
 
+    def check_batch(batch):
+        """The batch contract (fed by data.pipeline.make_batch_stream):
+        every leaf client-major with m * local_steps * b leading rows."""
+        leads = {x.shape[0] for x in jax.tree.leaves(batch)}
+        if not leads:
+            raise ValueError("empty batch: the step needs at least one "
+                             "client-major (m * local_steps * b)-row leaf")
+        if len(leads) != 1:
+            raise ValueError(
+                f"batch leaves disagree on leading rows {sorted(leads)} — "
+                "every modality must ride the same client-major row stream")
+        rows = leads.pop()
+        if rows == 0 or rows % (m * local_steps) != 0:
+            raise ValueError(
+                f"batch has {rows} leading rows, not divisible by "
+                f"m*local_steps = {m}*{local_steps} — the step consumes "
+                "client-major (m * local_steps * b)-row batches; feed it "
+                "with data.pipeline.make_batch_stream")
+
     def step(state: TrainState, batch, key):
+        check_batch(batch)
         rkey = jax.random.fold_in(key, state.step)
         round_fn = nastya_epoch if local_steps > 1 else flat_round
         (direction, new_shifts, new_ms, new_psh, new_pms, loss,

@@ -7,7 +7,9 @@ On CPU (this container) it runs the REDUCED config of the chosen arch on an
 8-host-device (data=4, model=2) mesh; on a real pod pass --production-mesh
 to build the 16x16 (or 2x16x16 with --multi-pod) mesh and the full config.
 Every piece is the production path: shard_map per-client gradients, the
-paper's compressed wire, DIANA shifts, RR data pipeline, checkpointing.
+paper's compressed wire, DIANA shifts, the epoch-indexed RR batch stream
+(`data.pipeline`, DESIGN.md §3.7) with double-buffered prefetch, and
+cursor-checkpointed resume (`--resume` bit-reproduces the data stream).
 """
 import os
 
@@ -23,13 +25,35 @@ from repro.launch import compat
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_pytree
+from repro.checkpoint import load_meta, restore_train_state, save_pytree
 from repro.configs import ARCH_NAMES, get_config, reduced
 from repro.core.dist import CompressedAggregation
+from repro.data.pipeline import make_batch_stream
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh, make_test_mesh, num_clients
+
+
+def stub_modalities(cfg, m: int, n_batches: int, b: int, *, seed: int = 0):
+    """Client-stacked VLM/audio stub leaves, (m, n, b, ...) like the tokens.
+
+    Each (client, batch-slot) holds its own deterministic rows, so the
+    stream's RR gather keeps modalities row-aligned with the tokens (the
+    seed-era `tile_extra` handed every local micro-step byte-identical
+    rows — indistinguishable from a misaligned stream in any test).
+    """
+    extras = {}
+    rng = np.random.default_rng(seed)
+    if cfg.family == "vlm":
+        extras["patches"] = rng.normal(
+            size=(m, n_batches, b, cfg.vision_patches, cfg.d_model)
+        ).astype(cfg.dtype)
+    if cfg.is_encdec:
+        extras["frames"] = rng.normal(
+            size=(m, n_batches, b, cfg.encoder_seq, cfg.d_model)
+        ).astype(cfg.dtype)
+    return extras
 
 
 def main():
@@ -58,6 +82,11 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--checkpoint", default=None, help="save state here at end")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint to restore (state + data-stream cursor; "
+                         "the continued run bit-matches an uninterrupted one)")
+    ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
+                    help="disable the double-buffered host prefetch")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -79,7 +108,7 @@ def main():
                                 fraction=args.fraction,
                                 shift_dtype=jnp.float32)
     remat = "full" if args.production_mesh else False
-    jitted, abstract, shardings, _ = steps.make_train_step(
+    jitted, abstract, shardings, batch_sh = steps.make_train_step(
         cfg, mesh, agg=agg, lr=args.lr, eta=args.eta,
         local_steps=args.local_steps, remat=remat,
         optimizer=args.optimizer)
@@ -89,57 +118,61 @@ def main():
           f"local_steps={args.local_steps} opt={args.optimizer}")
 
     n_batches = 8
-    data = synthetic_token_batches(
-        vocab=cfg.vocab, seq_len=args.seq, batch=max(1, args.batch // m),
-        num_batches=n_batches, num_clients=m, seed=0)
-    # VLM / audio stub inputs
-    extras = {}
-    if cfg.family == "vlm":
-        extras["patches"] = np.random.default_rng(0).normal(
-            size=(args.batch, cfg.vision_patches, cfg.d_model)).astype(np.float32)
-    if cfg.is_encdec:
-        extras["frames"] = np.random.default_rng(0).normal(
-            size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    b = max(1, args.batch // m)
+    data = {"tokens": synthetic_token_batches(
+        vocab=cfg.vocab, seq_len=args.seq, batch=b,
+        num_batches=n_batches, num_clients=m, seed=0)}
     sampler = ReshuffleSampler(m, n_batches, mode=args.sampling, seed=1)
 
+    start_step = 0
+    if args.resume:
+        meta = load_meta(args.resume)
+        cursor = (meta.get("meta") or {}).get("data_stream")
+        if cursor is None:
+            raise SystemExit(f"{args.resume}: no data-stream cursor in "
+                             "manifest — not a train.py checkpoint?")
+        if cursor["sampler"] != sampler.spec() or \
+                cursor["local_steps"] != args.local_steps:
+            raise SystemExit(
+                f"{args.resume}: checkpointed stream {cursor} does not match "
+                "this run's sampler/local_steps — refusing to resume onto a "
+                "different data stream")
+        start_step = cursor["train_step"]
+
     with compat.set_mesh(mesh):
-        state = jax.device_put(
-            steps.init_train_state(jax.random.key(0), cfg, agg, m,
-                                   optimizer=args.optimizer, mesh=mesh,
-                                   local_steps=args.local_steps), shardings)
+        if args.resume:
+            state = restore_train_state(args.resume, abstract, shardings)
+            print(f"resumed {args.resume} at step {start_step} "
+                  f"(epoch {cursor['epoch']}, batch {cursor['step']})")
+        else:
+            state = jax.device_put(
+                steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                       optimizer=args.optimizer, mesh=mesh,
+                                       local_steps=args.local_steps), shardings)
         key = jax.random.key(1)
         t0 = time.time()
-        ls = args.local_steps
 
-        def micro_batch(c, g):  # g-th global micro-step of client c
-            e, i = divmod(g, n_batches)
-            return data[c, sampler.epoch_order(e)[c, i]]
-
-        def tile_extra(v):
-            # every batch leaf must be client-major (m * ls * b) rows: give
-            # each client ls copies of its own stub rows
-            b = v.shape[0] // m
-            v = v[:m * b].reshape((m, 1, b) + v.shape[1:])
-            return np.repeat(v, ls, axis=1).reshape((m * ls * b,) + v.shape[3:])
-
-        for t in range(args.steps):
-            # client-major rows; ls micro-batches per client per call,
-            # consumed strictly in RR order across epoch boundaries
-            tok = np.concatenate(
-                [micro_batch(c, t * ls + j)
-                 for c in range(m) for j in range(ls)], 0)
-            batch = {"tokens": jnp.asarray(tok)}
-            batch.update({k: jnp.asarray(tile_extra(v)).astype(cfg.dtype)
-                          for k, v in extras.items()})
-            state, metrics = jitted(state, batch, key)
-            if t % args.log_every == 0 or t == args.steps - 1:
-                print(f"step {t:5d} | loss {float(metrics['loss']):8.4f} | "
-                      f"gnorm {float(metrics['grad_norm']):9.3f} | "
-                      f"{(time.time()-t0)/(t+1):6.2f}s/step", flush=True)
-        if args.checkpoint:
-            save_pytree(args.checkpoint, jax.device_get(state),
-                        step=int(state.step))
-            print(f"checkpoint -> {args.checkpoint}")
+        # the NASTYA-aware stream owns RR order, client-major assembly,
+        # modality alignment, and prefetch+device_put overlap
+        stream = make_batch_stream(
+            data, sampler, local_steps=args.local_steps,
+            extras=stub_modalities(cfg, m, n_batches, b),
+            put=lambda batch: jax.device_put(batch, batch_sh(batch)),
+            prefetch=args.prefetch, start_step=start_step)
+        with stream:
+            for t, batch in zip(range(start_step, args.steps), stream):
+                state, metrics = jitted(state, batch, key)
+                if t % args.log_every == 0 or t == args.steps - 1:
+                    print(f"step {t:5d} | loss {float(metrics['loss']):8.4f} | "
+                          f"gnorm {float(metrics['grad_norm']):9.3f} | "
+                          f"{(time.time()-t0)/(t-start_step+1):6.2f}s/step",
+                          flush=True)
+            if args.checkpoint:
+                save_pytree(args.checkpoint, jax.device_get(state),
+                            step=int(state.step),
+                            meta={"data_stream": stream.cursor_meta()})
+                print(f"checkpoint -> {args.checkpoint} "
+                      f"(cursor {stream.cursor})")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,22 @@ from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import lm_inputs_labels, synthetic_token_batches
 
 
+def test_epoch_order_idempotent_all_modes():
+    """The headline-bug regression at sampler level: epoch_order(e) must be
+    a pure function of (seed, e) — the seed-era sampler mutated its RNG and
+    returned a FRESH permutation on every call (`del epoch`)."""
+    for mode in ("rr", "rr_once", "wr"):
+        s = ReshuffleSampler(4, 8, mode=mode, seed=3)
+        a, b = s.epoch_order(2), s.epoch_order(2)
+        assert (a == b).all(), mode
+        # and a twin sampler (fresh object, same seed) agrees — resumable
+        t = ReshuffleSampler(4, 8, mode=mode, seed=3)
+        assert (t.epoch_order(2) == a).all(), mode
+        # interleaved queries don't perturb each other (no hidden state)
+        s.epoch_order(7)
+        assert (s.epoch_order(2) == a).all(), mode
+
+
 def test_rr_fresh_permutation_every_epoch():
     s = ReshuffleSampler(4, 8, mode="rr", seed=0)
     e0, e1 = s.epoch_order(0), s.epoch_order(1)
