@@ -199,6 +199,68 @@ def run_scale(name: str, tree, *, fraction: float, levels: int, reps: int):
             f"   ({shift['seed'] / sec:5.1f}x vs seed)"
         print(f"shift  {path:10s} {fmt(sec)}{extra}")
     out["diana_shift"] = shift
+    out["randk_speedup_pallas_vs_reference"] = (
+        randk["reference"] / randk["pallas"])
+    return out
+
+
+def run_rules(*, m: int, n_slots: int, d: int, reps: int):
+    """Shift-rule layer hot path: the per-slot (DIANA-RR) round update.
+
+    One round reads each client's active table row, applies the fused
+    DIANA update to the row, and scatters it back. Three paths:
+
+      unfused    seed-style arithmetic: select, three separate tree_maps
+                 (five HBM passes over the M-row slab), scatter.
+      reference  rule chain (select/update/scatter via repro.core.rules)
+                 dispatching to the pure-jnp backend.
+      pallas     same rule chain through the fused Pallas kernel.
+
+    The rule layer must not cost anything over hand-written arithmetic —
+    this is the guard that the unification kept the kernelized hot loop.
+    """
+    from repro.core.rules import get_rule
+
+    key = jax.random.key(29)
+    ks = jax.random.split(key, 3)
+    table = {"w": jax.random.normal(ks[0], (m, n_slots, d), jnp.float32)}
+    g = {"w": jax.random.normal(ks[1], (m, d), jnp.float32)}
+    col = jax.random.randint(ks[2], (m,), 0, n_slots)
+    alpha = 0.25
+    rule = get_rule("per_slot")
+    print(f"\n--- rules: per-slot update, M={m} x n={n_slots} slots x "
+          f"d={d:,} " + "-" * 16)
+    out = {"clients": m, "n_slots": n_slots, "d": d}
+
+    def unfused(table, g, col):
+        idx = (jnp.arange(m), col)
+        h = jax.tree.map(lambda s: s[idx], table)
+        q = jax.tree.map(jnp.subtract, g, h)
+        ghat = jax.tree.map(jnp.add, h, q)
+        h_new = jax.tree.map(lambda hi, qi: hi + alpha * qi, h, q)
+        new_table = jax.tree.map(lambda s, hn: s.at[idx].set(hn), table, h_new)
+        return ghat, new_table
+
+    def ruled(be):
+        def f(table, g, col):
+            idx = (jnp.arange(m), col)
+            h = rule.select(table, idx)
+            q = rule.payload(g, h)
+            ghat, h_new, _ = rule.update(h, q, h, q, alpha=alpha, backend=be)
+            return ghat, rule.scatter(table, idx, h_new)
+        return f
+
+    times = {"unfused": bench(unfused, table, g, col, reps=reps)}
+    for bname in ("reference", "pallas"):
+        times[bname] = bench(ruled(CompressionBackend(bname)), table, g, col,
+                             reps=reps)
+    for path, sec in times.items():
+        extra = "" if path == "unfused" else \
+            f"   ({times['unfused'] / sec:5.1f}x vs unfused)"
+        print(f"slot   {path:10s} {fmt(sec)}{extra}")
+    out["per_slot"] = times
+    out["per_slot_speedup_reference_vs_unfused"] = (
+        times["unfused"] / times["reference"])
     return out
 
 
@@ -366,11 +428,41 @@ def run_pipeline_bench(*, quick: bool, reps: int):
     return out
 
 
+def check_baseline(results: dict, baseline_path: str) -> bool:
+    """CI guard: fail when the pallas-vs-reference (and pallas-vs-seed)
+    Rand-k speedups regress below the committed BENCH_compression.json.
+
+    Shapes differ between --quick (CI) and full runs and shared runners are
+    noisy, so the gate is a generous fraction of the committed ratio —
+    tight enough to catch a kernel path silently falling back or slowing by
+    integer factors, loose enough not to flake on timer jitter.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)["scales"]["logreg"]
+    cur = results["scales"]["logreg"]
+    ok = True
+    for key, floor_frac in (("randk_speedup_pallas_vs_reference", 0.35),
+                            ("randk_speedup_pallas_vs_seed", 0.35)):
+        if key not in base:
+            print(f"baseline has no {key}; skipping that gate")
+            continue
+        floor = floor_frac * base[key]
+        status = "ok" if cur[key] >= floor else "REGRESSED"
+        print(f"baseline gate {key}: current {cur[key]:.2f}x vs committed "
+              f"{base[key]:.2f}x (floor {floor:.2f}x) -> {status}")
+        ok = ok and cur[key] >= floor
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller shapes + fewer reps (CI smoke)")
     ap.add_argument("--out", default="BENCH_compression.json")
+    ap.add_argument("--check-baseline", default=None, metavar="JSON",
+                    help="compare speedups against a committed "
+                         "BENCH_compression.json and exit nonzero on "
+                         "regression (the CI smoke gate)")
     args = ap.parse_args()
 
     reps = 5 if args.quick else 10
@@ -400,6 +492,11 @@ def main() -> None:
         fraction=0.05, levels=8, reps=max(3, reps // 2),
     )
 
+    results["rules"] = run_rules(
+        m=8, n_slots=8, d=20_000 if args.quick else 120_000,
+        reps=max(3, reps // 2),
+    )
+
     results["pod_wire"] = run_pod_wire(
         d=8_192 if args.quick else 65_536, fraction=0.05,
         reps=max(3, reps // 2),
@@ -417,6 +514,10 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {args.out} in {results['meta']['elapsed_s']}s")
+
+    if args.check_baseline and not check_baseline(results,
+                                                  args.check_baseline):
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dist import CompressedAggregation
-from repro.data.pipeline import make_batch_stream
+from repro.data.pipeline import make_batch_stream, shared_slots_for_step
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
 from repro.launch import compat
@@ -48,7 +48,11 @@ def main():
     ap.add_argument("--batch", type=int, default=8)  # global; 2 per client
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--fraction", type=float, default=0.05)
-    ap.add_argument("--agg", choices=("diana", "q", "dense"), default="diana")
+    ap.add_argument("--agg", choices=("diana_rr", "diana", "q", "dense"),
+                    default="diana_rr",
+                    help="diana_rr is the paper's Algorithm 3 on the wire: "
+                         "per-slot shift tables + the shared (rr_shared) "
+                         "reshuffling order")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -56,8 +60,11 @@ def main():
                      norm="rmsnorm", act="swiglu", **PRESETS[args.preset])
     mesh = make_test_mesh((4, 2), ("data", "model"))
     m = num_clients(mesh)
+    n_batches = 8
+    slotted = args.agg == "diana_rr"
     agg = CompressedAggregation(method=args.agg, wire="shared",
                                 fraction=args.fraction,
+                                n_slots=n_batches if slotted else 1,
                                 shift_dtype=jnp.float32)
     jitted, abstract, shardings, batch_sh = steps.make_train_step(
         cfg, mesh, agg=agg, lr=args.lr, remat=False)
@@ -66,13 +73,14 @@ def main():
     print(f"model: {n_params/1e6:.1f}M params | clients={m} | agg={args.agg} "
           f"(k/d={args.fraction}) | mesh=(data=4, model=2)")
 
-    # random-reshuffling data pipeline: each client re-permutes its local
-    # batches every epoch (the paper's 'RR' — a data-pipeline property)
-    n_batches = 8
+    # random-reshuffling data pipeline (the paper's 'RR' — a data-pipeline
+    # property). DIANA-RR uses the SHARED per-epoch order so every client
+    # sits on the same shift-table slot each round (DESIGN.md §3.8).
     data = synthetic_token_batches(
         vocab=cfg.vocab, seq_len=args.seq, batch=args.batch // m,
         num_batches=n_batches, num_clients=m, seed=0)
-    sampler = ReshuffleSampler(m, n_batches, mode="rr", seed=1)
+    sampler = ReshuffleSampler(m, n_batches,
+                               mode="rr_shared" if slotted else "rr", seed=1)
 
     with compat.set_mesh(mesh):
         state = jax.device_put(
@@ -87,7 +95,12 @@ def main():
             put=lambda b: jax.device_put(b, batch_sh(b)))
         with stream:
             for t, batch in zip(range(args.steps), stream):
-                state, metrics = jitted(state, batch, key)
+                if slotted:
+                    slots = jnp.asarray(shared_slots_for_step(
+                        sampler, t, n_slots=agg.n_slots))
+                    state, metrics = jitted(state, batch, key, slots)
+                else:
+                    state, metrics = jitted(state, batch, key)
                 if t % args.log_every == 0 or t == args.steps - 1:
                     loss = float(metrics["loss"])
                     first = first if first is not None else loss

@@ -17,8 +17,8 @@ Two backends implement the same primitives:
 
 Consumers:
 
-- `repro.core.algorithms` routes `_compress_clients` and the DIANA shift
-  updates through `compress_clients` / `tree_diana_shift`;
+- `repro.core.algorithms` routes per-client compression and the shift-rule
+  updates (repro.core.rules) through `compress_clients` / `tree_diana_shift`;
 - `repro.core.dist` routes the shared wire through `wire_compress` /
   `wire_decompress`;
 - `benchmarks/compression_bench.py` times both backends against the seed

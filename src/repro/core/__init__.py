@@ -12,6 +12,7 @@ from repro.core.algorithms import (
     theoretical_stepsizes,
 )
 from repro.core.dist import CompressedAggregation, DianaState
+from repro.core.rules import RULES, WIRE_RULES, ShiftRule, get_rule
 
 __all__ = [
     "FedState",
@@ -23,4 +24,8 @@ __all__ = [
     "theoretical_stepsizes",
     "CompressedAggregation",
     "DianaState",
+    "ShiftRule",
+    "RULES",
+    "WIRE_RULES",
+    "get_rule",
 ]

@@ -24,6 +24,13 @@ by :func:`make_epoch_fn`, jit-compatible, with `lax.scan` over the inner
 iterations and `vmap` over clients. Stepsize defaults follow the theory
 (Theorems 1-4); pass explicit values to override (the paper multiplies the
 theoretical stepsize by a tuned constant).
+
+What distinguishes the methods — the client memory and how it shapes the
+wire message — lives in the shared shift-rule layer (`repro.core.rules`,
+DESIGN.md §3.8): each `AlgoSpec.shift_mode` names a `ShiftRule`, and the
+drivers below dispatch select/payload/update/scatter through it. The
+production wire (`repro.core.dist`) consumes the SAME rule instances, so
+simulator and pod paths cannot drift apart.
 """
 from __future__ import annotations
 
@@ -38,6 +45,7 @@ from repro.compression.ops import Identity, tree_compression_bits
 from repro.core.api import (
     FedState,
     LossFn,
+    accumulate_bits,
     clients_grad,
     init_state,
     num_batches,
@@ -45,10 +53,9 @@ from repro.core.api import (
     round_batches,
     sample_permutations,
     tree_mean_clients,
-    tree_scale,
-    tree_sub,
     tree_zeros_like,
 )
+from repro.core.rules import get_rule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,27 +96,10 @@ ALGORITHMS: dict[str, AlgoSpec] = {
 
 def init_algorithm(spec: AlgoSpec, params, m: int, n: int) -> FedState:
     """Build the initial FedState with the right shift layout for `spec`."""
-    if spec.shift_mode == "none":
-        shifts = None
-    elif spec.shift_mode in ("single", "ef"):
-        shifts = jax.tree.map(lambda p: jnp.zeros((m,) + p.shape, p.dtype), params)
-    elif spec.shift_mode == "per_slot":
-        shifts = jax.tree.map(lambda p: jnp.zeros((m, n) + p.shape, p.dtype), params)
-    else:
-        raise ValueError(spec.shift_mode)
-    server_h = tree_zeros_like(params) if spec.shift_mode == "single" else None
+    rule = get_rule(spec.shift_mode)
+    shifts = rule.init_shifts(params, m, n_slots=n)
+    server_h = tree_zeros_like(params) if rule.needs_server_h else None
     return init_state(params, shifts=shifts, server_h=server_h)
-
-
-def _compress_clients(comp, key, grads_stacked, backend: CompressionBackend):
-    """Compress every client's gradient pytree in one backend launch.
-
-    Each client uses independent randomness (the paper's Q are independent
-    across workers — this is what makes the 1/M variance factor appear); the
-    backend ravels the whole (M, D) client matrix once and runs a single
-    flat-buffer kernel instead of a per-leaf loop under vmap.
-    """
-    return backend.compress_clients(comp, key, grads_stacked)
 
 
 def _sample_round_indices(spec: AlgoSpec, key, m: int, n: int) -> jax.Array:
@@ -127,6 +117,7 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
                     alpha: float, backend: CompressionBackend,
                     state: FedState, data, key, order=None) -> FedState:
     m, n = num_clients(data), num_batches(data)
+    rule = get_rule(spec.shift_mode)
     k_idx, k_comp = jax.random.split(key)
     # the epoch's batch order: host-side pipeline (data.pipeline feeds the
     # stateless ReshuffleSampler's matrix) or the on-device fallback draw
@@ -141,36 +132,17 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
         batches = round_batches(data, col)
         g = clients_grad(loss_fn, params, batches)  # leaves (M, ...)
 
-        if spec.shift_mode == "none":
-            ghat = _compress_clients(comp, k, g, backend)
-            new_shifts = shifts
-        elif spec.shift_mode == "ef":
-            # error feedback: p_m = gamma*g_m + e_m; send C(p_m); keep the
-            # compression residual as next round's memory. The common
-            # `params - gamma*direction` update divides gamma back out.
-            p_t = jax.tree.map(lambda gi, e: gamma * gi + e, g, shifts)
-            qd = _compress_clients(comp, k, p_t, backend)
-            new_shifts = jax.tree.map(jnp.subtract, p_t, qd)
-            ghat = jax.tree.map(lambda q: q / gamma, qd)
-        elif spec.shift_mode == "single":
-            delta = tree_sub(g, shifts)
-            qd = _compress_clients(comp, k, delta, backend)
-            # fused kernel: ghat = h + Q, h' = h + alpha*Q in one pass
-            ghat, new_shifts, _ = backend.tree_diana_shift(
-                shifts, qd, shifts, qd, alpha=alpha
-            )
-        elif spec.shift_mode == "per_slot":
-            h_i = jax.tree.map(lambda s: s[arange_m, col], shifts)
-            delta = tree_sub(g, h_i)
-            qd = _compress_clients(comp, k, delta, backend)
-            ghat, h_i_new, _ = backend.tree_diana_shift(
-                h_i, qd, h_i, qd, alpha=alpha
-            )
-            new_shifts = jax.tree.map(
-                lambda s, hn: s.at[arange_m, col].set(hn), shifts, h_i_new
-            )
-        else:
-            raise ValueError(spec.shift_mode)
+        # one rule call-chain replaces the per-method ladders: select the
+        # round's memory (per-slot tables index by (client, batch)), build
+        # the compressed payload, run every client through ONE backend
+        # launch (independent randomness per client — the paper's 1/M
+        # variance factor), apply the rule's fused update, write back.
+        h = rule.select(shifts, (arange_m, col))
+        p = rule.payload(g, h, gamma=gamma)
+        q = backend.compress_clients(comp, k, p)
+        ghat, h_new, _ = rule.update(h, q, h, q, alpha=alpha, gamma=gamma,
+                                     backend=backend, payload=p)
+        new_shifts = rule.scatter(shifts, (arange_m, col), h_new)
 
         direction = tree_mean_clients(ghat)
         new_params = jax.tree.map(lambda p, d: p - gamma * d, params, direction)
@@ -180,11 +152,14 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
         step, (state.params, state.shifts), (idx.T, step_keys)
     )
     bits_per_round = float(m * tree_compression_bits(comp, state.params))
+    bits, bits_lo = accumulate_bits(state.bits, state.bits_lo,
+                                    n * bits_per_round)
     return state._replace(
         params=params,
         shifts=shifts,
         rounds=state.rounds + n,
-        bits=state.bits + n * bits_per_round,
+        bits=bits,
+        bits_lo=bits_lo,
     )
 
 
@@ -196,6 +171,12 @@ def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float
                  alpha: float, backend: CompressionBackend,
                  state: FedState, data, key, order=None) -> FedState:
     m, n = num_clients(data), num_batches(data)
+    rule = get_rule(spec.shift_mode)
+    if not rule.supports_local:
+        raise ValueError(
+            f"shift rule {rule.name!r} has no local-family driver (the "
+            "local methods communicate one epoch gradient — there is no "
+            "per-batch slot or residual stream to feed it)")
     k_idx, k_comp = jax.random.split(key)
     idx = order if order is not None else \
         _sample_round_indices(spec, k_idx, m, n)  # (M, n)
@@ -213,34 +194,29 @@ def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float
     # g_{t,m} = (x_t - x^n_{t,m}) / (gamma * n)   (Alg. 4/5 line 7)
     g = jax.tree.map(lambda p, xn: (p - xn) / (gamma * n), state.params, xns)
 
-    if spec.shift_mode == "none":
-        ghat = _compress_clients(comp, k_comp, g, backend)
-        shifts, server_h = state.shifts, state.server_h
-        direction = tree_mean_clients(ghat)
-    elif spec.shift_mode == "single":
-        delta = tree_sub(g, state.shifts)
-        qd = _compress_clients(comp, k_comp, delta, backend)
-        mean_qd = tree_mean_clients(qd)
-        # \hat g_t = h_t + (1/M) sum_m Q(g_{t,m} - h_{t,m})   (Alg. 5 line 11)
-        # fused: direction = H + mean_Q and H' = H + alpha*mean_Q in one pass
-        direction, _, server_h = backend.tree_diana_shift(
-            state.server_h, mean_qd, state.server_h, mean_qd, alpha=alpha
-        )
-        # the (M, d) client shifts only need the axpy — a fused call here
-        # would write two discarded M-times-param-sized outputs
-        shifts = jax.tree.map(lambda h, q: h + alpha * q, state.shifts, qd)
-    else:
-        raise ValueError(spec.shift_mode)
+    # rule chain (Alg. 5 lines 8-11 when shifts exist): compress the epoch
+    # messages, let the rule combine the aggregate with the server memory
+    # (\hat g_t = h_t + (1/M) sum_m Q(g_{t,m} - h_{t,m}), fused direction +
+    # H-update in one pass), and axpy the client tables.
+    h = rule.select(state.shifts, None)
+    p = rule.payload(g, h, gamma=gamma)
+    qd = backend.compress_clients(comp, k_comp, p)
+    direction, server_h = rule.direction(
+        state.server_h, tree_mean_clients(qd), alpha=alpha, gamma=gamma,
+        backend=backend)
+    shifts = rule.table_axpy(state.shifts, qd, alpha=alpha)
 
     step = eta if spec.server_stepsize else gamma * n
     params = jax.tree.map(lambda p, d: p - step * d, state.params, direction)
     bits_per_round = float(m * tree_compression_bits(comp, state.params))
+    bits, bits_lo = accumulate_bits(state.bits, state.bits_lo, bits_per_round)
     return state._replace(
         params=params,
         shifts=shifts,
         server_h=server_h,
         rounds=state.rounds + 1,
-        bits=state.bits + bits_per_round,
+        bits=bits,
+        bits_lo=bits_lo,
     )
 
 
@@ -266,9 +242,11 @@ def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
     """
     spec = ALGORITHMS[name]
     be = get_backend(backend)
-    comp = compressor
-    if comp is None or not spec.default_compressed and compressor is None:
-        comp = Identity()
+    # no compressor given -> identity (the old condition's second arm,
+    # `not spec.default_compressed and compressor is None`, was dead code:
+    # operator precedence made it reachable only when `comp is None` had
+    # already short-circuited the `or`)
+    comp = Identity() if compressor is None else compressor
     if alpha is None:
         # Theorems 2/4: alpha <= 1/(1+omega); identity => alpha=1
         try:
@@ -321,4 +299,11 @@ def theoretical_stepsizes(name: str, *, l_max: float, mu: float, omega: float,
         return {"gamma": gamma, "eta": eta, "alpha": alpha}
     if name in ("fedavg", "fedrr", "fedpaq"):
         return {"gamma": 1.0 / (5.0 * n * l_max)}
+    if name == "ef_topk_rr":
+        # EF-SGD (Stich et al. 2018; Karimireddy et al. 2019): a CONTRACTIVE
+        # compressor with contraction delta admits gamma = O(delta / L). Map
+        # the caller's omega onto delta via delta = 1/(1+omega) — exact for
+        # (Rand-/Top-)k at k/d = delta, where omega = d/k - 1.
+        delta = 1.0 / (1.0 + max(omega, 0.0))
+        return {"gamma": delta / (2.0 * l_max)}
     raise ValueError(name)

@@ -37,8 +37,14 @@ class FedState(NamedTuple):
     server_h:  running mean shift  h_t = (1/M) sum_m h_{t,m}  (DIANA-NASTYA
                server bookkeeping; None elsewhere).
     rounds:    communication rounds elapsed (int32 scalar).
-    bits:      cumulative uplink bits actually sent by all clients (float32 —
-               can exceed int32 range on long runs).
+    bits:      cumulative uplink bits actually sent by all clients. Stored as
+               a compensated (Kahan) float32 pair — `bits` is the running
+               total, `bits_lo` the compensation term — because a plain f32
+               accumulator silently stops incrementing once the total passes
+               ~2^24 x the per-round increment (24-bit mantissa), and jax's
+               default x64-disabled mode truncates a requested float64 back
+               to f32. The pair gives float64-grade accumulation (~48
+               effective mantissa bits); update via `accumulate_bits`.
     """
 
     params: Params
@@ -46,6 +52,7 @@ class FedState(NamedTuple):
     server_h: Any
     rounds: jax.Array
     bits: jax.Array
+    bits_lo: jax.Array = 0.0
 
 
 def init_state(params: Params, shifts: Any = None, server_h: Any = None) -> FedState:
@@ -55,7 +62,21 @@ def init_state(params: Params, shifts: Any = None, server_h: Any = None) -> FedS
         server_h=server_h,
         rounds=jnp.zeros((), jnp.int32),
         bits=jnp.zeros((), jnp.float32),
+        bits_lo=jnp.zeros((), jnp.float32),
     )
+
+
+def accumulate_bits(bits, bits_lo, inc):
+    """Compensated (Kahan-Neumaier style) f32 add: (bits', bits_lo').
+
+    Exactly the classic two-term recurrence: the low word keeps whatever the
+    high-word add rounded away, so increments of ~1e7 bits keep landing even
+    when the running total is >2^24 x larger. Works under jit — XLA does not
+    reassociate float adds, so `(t - bits) - y` is not folded to zero.
+    """
+    y = inc - bits_lo
+    t = bits + y
+    return t, (t - bits) - y
 
 
 # ---------------------------------------------------------------------------

@@ -46,16 +46,26 @@ Two-level (pod) hierarchy (DESIGN.md §3.6):
     client, which is exactly the paper's Algorithms 4-5 layout when the
     launch layer maps NASTYA local epochs onto the mesh (launch/steps.py).
 
-Aggregation methods (paper Secs. 2.1-2.2, production variants):
+Aggregation methods (paper Secs. 2.1-2.2, production variants). The
+shift/memory arithmetic of every method lives in ONE place — the shift-rule
+layer (`repro.core.rules`, DESIGN.md §3.8) shared with the simulator; this
+module only owns the wire (compression geometry, collectives, key derivation):
 
 - ``dense``     plain mean gradient (no compression) — sanity baseline
-- ``q``         Q-RR-style: direction = mean_m Q(g_m)
-- ``diana``     DIANA-RR-style with one shift per client (the n-shift variant
-                is exercised in the simulator; one shift per round-gradient is
-                the production memory-feasible choice, DESIGN.md §3.3):
+- ``q``         Q-RR-style: direction = mean_m Q(g_m)           (NoShift)
+- ``diana``     DIANA with one shift per client               (SingleShift):
                     direction = H_t + mean_m Q(g_m - h_m)
                     h_m   += alpha * Q(g_m - h_m)
                     H_t+1  = H_t + alpha * mean_m Q(g_m - h_m)
+- ``diana_rr``  DIANA-RR (paper Algorithm 3) with an n_slots-entry shift
+                table per rank (PerSlotShift): the round's shared batch
+                index selects which control variate the exchange reads and
+                updates. Requires every rank of a wire level on the SAME
+                slot per round — the `rr_shared` sampler order; see the
+                slot-semantics note in repro/core/rules.py.
+- ``ef``        error feedback (EfRule): memory is the compression residual
+                e_m; the wire sends the CONTRACTIVE (unscaled) Rand-block
+                window of g_m + e_m and keeps what it dropped.
 
 All functions are designed to run INSIDE a `shard_map` body whose manual axes
 include the client/pod axes; gradients arrive as this device's local block of
@@ -72,6 +82,7 @@ import numpy as np
 from jax import lax
 
 from repro.compression.backend import get_backend
+from repro.core.rules import WIRE_RULES, ShiftRule
 from repro.kernels.randk import BLOCK_ROWS
 
 # salt folded into the round key to derive the inter-pod (outer) wire key —
@@ -88,6 +99,11 @@ class DianaState(NamedTuple):
     the outer (inter-pod) level: one shift per pod and the global mean.
     Unused levels hold None (flat wire: pod_* is None; pod-granular NASTYA
     with `client_axes=()`: the inner pair is None).
+
+    Layout depends on the method's shift rule: 'diana' keeps param-shaped
+    leaves; 'diana_rr' prepends an `n_slots` axis to every table (the
+    round's slot indexes it); 'ef' keeps the residual in `shifts` only
+    (mean tables stay None — error feedback has no server memory).
     """
 
     shifts: Any  # h_m: this client's shift (differs across client_axes)
@@ -100,31 +116,57 @@ class DianaState(NamedTuple):
 class CompressedAggregation:
     """Config + pure functions for the production gradient wire."""
 
-    method: str = "diana"  # 'dense' | 'q' | 'diana'
+    method: str = "diana"  # 'dense' | 'q' | 'diana' | 'diana_rr' | 'ef'
     wire: str = "shared"  # 'shared' | 'independent'
     fraction: float = 0.02  # k/d on the intra-pod (inner) wire
     alpha: float | None = None  # shift stepsize; None -> 1/(1+omega) (Thm 2)
     shift_dtype: Any = jnp.bfloat16
+    n_slots: int = 1  # per-slot shift-table rows ('diana_rr': the data n)
     client_axes: tuple[str, ...] = ("data",)  # inner level (ranks in a pod)
     pod_axes: tuple[str, ...] = ()  # outer level; () = flat single-level wire
     pod_size: int = 1  # static product of pod_axes sizes (1 = no inter-pod link)
     pod_fraction: float | None = None  # inter-pod k/d; None -> `fraction`
     pod_alpha: float | None = None  # pod shift stepsize; None -> 1/(1+omega_pod)
+    pod_slots: int | None = None  # outer-level slot rows; None -> n_slots.
+    # configure_agg sets 1 on NASTYA paths: the inter-pod exchange carries
+    # the slot-free epoch gradient, so rows past 0 would never be touched.
     backend: str | None = None  # 'reference' | 'pallas' | None (env/default)
+
+    def __post_init__(self):
+        if self.method not in WIRE_RULES:
+            raise ValueError(f"unknown method {self.method!r}; options: "
+                             f"{sorted(WIRE_RULES)}")
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots={self.n_slots}")
+        if self.pod_slots is not None and self.pod_slots < 1:
+            raise ValueError(f"pod_slots={self.pod_slots}")
+
+    @property
+    def _pod_slots(self) -> int:
+        return self.n_slots if self.pod_slots is None else self.pod_slots
+
+    @property
+    def rule(self) -> ShiftRule:
+        """The method's shift rule — the single source of shift semantics
+        (shared with the simulator drivers; repro.core.rules)."""
+        return WIRE_RULES[self.method]
 
     # -- state ---------------------------------------------------------------
 
     def init(self, local_params) -> DianaState | None:
-        if self.method != "diana":
+        rule = self.rule
+        if not rule.has_shifts:
             return None
-        zeros = lambda p: jnp.zeros(p.shape, self.shift_dtype)
         inner = bool(self.client_axes)
         outer = bool(self.pod_axes)
+        mk = lambda ns: rule.init_shifts(local_params, n_slots=ns,
+                                         dtype=self.shift_dtype)
         return DianaState(
-            shifts=jax.tree.map(zeros, local_params) if inner else None,
-            mean_shift=jax.tree.map(zeros, local_params) if inner else None,
-            pod_shifts=jax.tree.map(zeros, local_params) if outer else None,
-            pod_mean_shift=jax.tree.map(zeros, local_params) if outer else None,
+            shifts=mk(self.n_slots) if inner else None,
+            mean_shift=mk(self.n_slots) if inner and rule.has_mean else None,
+            pod_shifts=mk(self._pod_slots) if outer else None,
+            pod_mean_shift=mk(self._pod_slots) if outer and rule.has_mean
+            else None,
         )
 
     def omega(self) -> float:
@@ -178,22 +220,33 @@ class CompressedAggregation:
 
     # -- aggregation ----------------------------------------------------------
 
-    def aggregate(self, grads, state: DianaState | None, key):
+    def _slot_idx(self, slot):
+        """Rule index for the round's shared slot (None when slot-free)."""
+        if not self.rule.slotted or slot is None:
+            return None
+        return (slot,)
+
+    def aggregate(self, grads, state: DianaState | None, key, *, slot=None):
         """(direction, new_state); call inside shard_map over the wire axes.
 
         Composed two-level exchange: the inner (intra-pod) level over
         `client_axes` with `key`, then the outer (inter-pod) level over
         `pod_axes` with an independently salted key. Either level degrades
         to a passthrough when its axes are empty (flat wire / 1-client pod).
+
+        `slot` is the round's shared batch index (scalar int32), consumed
+        by per-slot methods ('diana_rr') to pick the shift-table row at
+        both levels; other methods ignore it.
         """
         if self.method == "dense":
             axes = tuple(self.client_axes) + tuple(self.pod_axes)
             direction = jax.tree.map(lambda g: lax.pmean(g, axes), grads)
             return direction, state
-        direction, state = self.aggregate_local(grads, state, key)
-        return self.aggregate_pod(direction, state, key)
+        direction, state = self.aggregate_local(grads, state, key, slot=slot)
+        return self.aggregate_pod(direction, state, key, slot=slot)
 
-    def aggregate_local(self, grads, state: DianaState | None, key):
+    def aggregate_local(self, grads, state: DianaState | None, key, *,
+                        slot=None):
         """Inner level only: compressed exchange over `client_axes`.
 
         This is what each NASTYA local step runs — the pod's ranks psum
@@ -207,19 +260,22 @@ class CompressedAggregation:
             return direction, state
         if not self.client_axes:  # a pod of one client: no intra-pod wire
             return grads, state
-        h = state.shifts if self.method == "diana" else None
-        mh = state.mean_shift if self.method == "diana" else None
+        rule = self.rule
+        h = state.shifts if rule.has_shifts else None
+        mh = state.mean_shift if rule.has_mean else None
         dirs, new_h, new_mh = self._level(
             grads, h, mh, key,
             axes=self.client_axes,
             fold_axes=tuple(self.pod_axes) + tuple(self.client_axes),
             fraction=self.fraction, alpha=self.shift_lr,
+            idx=self._slot_idx(slot),
         )
-        if self.method == "diana":
+        if rule.has_shifts:
             state = state._replace(shifts=new_h, mean_shift=new_mh)
         return dirs, state
 
-    def aggregate_pod(self, direction, state: DianaState | None, key):
+    def aggregate_pod(self, direction, state: DianaState | None, key, *,
+                      slot=None):
         """Outer level only: compressed exchange over `pod_axes`.
 
         `key` is the same round key given to `aggregate_local`; the actual
@@ -228,6 +284,9 @@ class CompressedAggregation:
         link: the exchange is the exact mean over the (size-1) pod axes —
         numerically the identity, which is what makes the 1-pod two-level
         wire bit-match the flat wire.
+
+        With a per-slot method and `slot=None` (the NASTYA epoch gradient,
+        which has no batch index) the rule falls back to table row 0.
         """
         if not self.pod_axes or self.method == "dense":
             if self.pod_axes:
@@ -240,31 +299,39 @@ class CompressedAggregation:
                 lambda g: lax.pmean(g, self.pod_axes), direction
             )
             return direction, state
+        rule = self.rule
         pod_key = jax.random.fold_in(key, POD_KEY_SALT)
-        h = state.pod_shifts if self.method == "diana" else None
-        mh = state.pod_mean_shift if self.method == "diana" else None
+        h = state.pod_shifts if rule.has_shifts else None
+        mh = state.pod_mean_shift if rule.has_mean else None
         dirs, new_h, new_mh = self._level(
             direction, h, mh, pod_key,
             axes=self.pod_axes, fold_axes=tuple(self.pod_axes),
             fraction=self._pod_fraction, alpha=self.pod_shift_lr,
+            idx=self._slot_idx(slot),
         )
-        if self.method == "diana":
+        if rule.has_shifts:
             state = state._replace(pod_shifts=new_h, pod_mean_shift=new_mh)
         return dirs, state
 
     # -- one exchange level ----------------------------------------------------
 
     def _level(self, grads, h_tree, mh_tree, key, *, axes, fold_axes,
-               fraction, alpha):
-        """One compressed exchange over `axes`: Q per rank, psum, (DIANA).
+               fraction, alpha, idx=None):
+        """One compressed exchange over `axes`: Q per rank, psum, rule update.
 
         Returns (direction_tree, new_shifts_tree, new_mean_shift_tree); the
-        shift trees are None when h_tree is None (method 'q').
+        shift trees are None when h_tree is None. This module only owns the
+        wire mechanics — select/payload/update/scatter all come from the
+        shift rule (repro.core.rules), the same arithmetic the simulator
+        drivers run, with the fused diana_shift kernel on the DIANA paths
+        (one pass over four inputs, three outputs, instead of five separate
+        param-sized HBM round-trips).
         """
+        rule = self.rule
         compress = (self._exchange_shared if self.wire == "shared"
                     else self._exchange_independent)
         leaves, treedef = jax.tree.flatten(grads)
-        if h_tree is None:  # 'q': direction = mean_m Q(g_m)
+        if h_tree is None:  # memory-free ('q'): direction = mean_m Q(g_m)
             out = []
             for i, g in enumerate(leaves):
                 _, q_mean = compress(self._leaf_key(key, i), g, axes,
@@ -272,28 +339,30 @@ class CompressedAggregation:
                 out.append(q_mean.astype(g.dtype))
             return jax.tree.unflatten(treedef, out), None, None
 
-        # 'diana' — the shift/direction arithmetic runs through the fused
-        # kernel (one pass over four inputs, three outputs) instead of five
-        # separate param-sized HBM round-trips.
         be = get_backend(self.backend)
         h_leaves = jax.tree.leaves(h_tree)
-        mh_leaves = jax.tree.leaves(mh_tree)
+        mh_leaves = (jax.tree.leaves(mh_tree) if mh_tree is not None
+                     else [None] * len(leaves))
         dirs, new_h, new_mh = [], [], []
-        for i, (g, h, mh) in enumerate(zip(leaves, h_leaves, mh_leaves)):
-            delta = g.astype(jnp.float32) - h.astype(jnp.float32)
-            q_own, q_mean = compress(self._leaf_key(key, i), delta, axes,
-                                     fold_axes, fraction)
-            direction, h_new, mh_new = be.diana_shift_flat(
-                h.astype(self.shift_dtype), q_own.astype(jnp.float32),
-                mh.astype(self.shift_dtype), q_mean.astype(jnp.float32),
-                alpha=alpha,
+        for i, (g, ht, mht) in enumerate(zip(leaves, h_leaves, mh_leaves)):
+            h = rule.select(ht, idx)  # shift_dtype table row (or residual)
+            mh = rule.select(mht, idx) if mht is not None else None
+            p = rule.payload(g.astype(jnp.float32), h.astype(jnp.float32))
+            q_own, q_mean = compress(self._leaf_key(key, i), p, axes,
+                                     fold_axes, fraction,
+                                     contractive=rule.contractive)
+            direction, h_new, mh_new = rule.update(
+                h, q_own.astype(jnp.float32), mh, q_mean.astype(jnp.float32),
+                alpha=alpha, backend=be, payload=p,
             )
-            new_h.append(h_new)
-            new_mh.append(mh_new)
+            new_h.append(rule.scatter(ht, idx, h_new.astype(ht.dtype)))
+            if mht is not None:
+                new_mh.append(rule.scatter(mht, idx, mh_new.astype(mht.dtype)))
             dirs.append(direction.astype(g.dtype))
         return (jax.tree.unflatten(treedef, dirs),
                 jax.tree.unflatten(treedef, new_h),
-                jax.tree.unflatten(treedef, new_mh))
+                jax.tree.unflatten(treedef, new_mh) if mh_tree is not None
+                else None)
 
     # shared-seed Rand-block: sparse collectives -------------------------------
     #
@@ -315,12 +384,18 @@ class CompressedAggregation:
         nb = n_rows_padded // BLOCK_ROWS
         return nb, max(1, int(fraction * nb))
 
-    def _exchange_shared(self, key, delta, axes, fold_axes, fraction):
+    def _exchange_shared(self, key, delta, axes, fold_axes, fraction,
+                         contractive: bool = False):
         """Shared-key Rand-block exchange of one leaf over `axes`.
 
         Returns (q_own, q_mean) dense reconstructions. Only the k-row slab
         crosses the wire (the sparse collective runs inside the backend's
         `wire_exchange`); both reconstructions reuse the one start_block.
+
+        contractive=True divides out the unbiased nb/kb scaling — the
+        UNSCALED window projection (contraction factor kb/nb) that error
+        feedback requires; the d/k-scaled reconstruction makes the EF
+        residual grow instead of contract.
         """
         del fold_axes  # shared draw: every rank uses the same key
         be = get_backend(self.backend)
@@ -329,6 +404,9 @@ class CompressedAggregation:
         start_block = jax.random.randint(key, (), 0, nb)
         vals, mean_vals = be.wire_exchange(rows, start_block, k_blocks=kb,
                                            block_rows=BLOCK_ROWS, axes=axes)
+        if contractive:
+            vals = vals * (kb / nb)
+            mean_vals = mean_vals * (kb / nb)
         return (self._scatter_block(delta, start_block, vals),
                 self._scatter_block(delta, start_block, mean_vals))
 
@@ -342,19 +420,27 @@ class CompressedAggregation:
 
     # independent-seed Rand-k: paper-exact, dense collectives ------------------
 
-    def _exchange_independent(self, key, delta, axes, fold_axes, fraction):
+    def _exchange_independent(self, key, delta, axes, fold_axes, fraction,
+                              contractive: bool = False):
         """Unbiased Rand-k over rows (with-replacement indices: omega <= n/k,
         avoids a full permutation sort on device; see DESIGN.md §3), one
         independent draw per rank (key folded with the rank's coordinates
-        along `fold_axes`), then a dense psum over `axes`."""
+        along `fold_axes`), then a dense psum over `axes`.
+        contractive=True keeps the selected rows UNSCALED (set semantics:
+        duplicate draws count once) — the projection error feedback needs."""
         for ax in fold_axes:
             key = jax.random.fold_in(key, lax.axis_index(ax))
         rows = self._row_view(delta.astype(jnp.float32))
         n = rows.shape[0]
         k = self._k(n, fraction)
         idx = jax.random.randint(key, (k,), 0, n)
-        vals = rows[idx] * (n / k)
-        out = jnp.reshape(jnp.zeros_like(rows).at[idx].add(vals), delta.shape)
+        if contractive:
+            out = jnp.reshape(
+                jnp.zeros_like(rows).at[idx].set(rows[idx]), delta.shape)
+        else:
+            vals = rows[idx] * (n / k)
+            out = jnp.reshape(
+                jnp.zeros_like(rows).at[idx].add(vals), delta.shape)
         return out, lax.pmean(out, axes)
 
     # -- wire accounting (benchmarks / EXPERIMENTS.md) -------------------------
@@ -377,8 +463,9 @@ class CompressedAggregation:
             dense += rows * cols * jnp.dtype(leaf.dtype).itemsize
             if self.method == "dense" or self.wire == "independent":
                 continue
-            # the diana wire psums f32 deltas; 'q' slabs travel at leaf dtype
-            slab_item = 4 if self.method == "diana" else jnp.dtype(
+            # stateful wires (diana/diana_rr/ef) psum f32 payloads; the
+            # memory-free 'q' slabs travel at leaf dtype
+            slab_item = 4 if self.rule.has_shifts else jnp.dtype(
                 leaf.dtype).itemsize
             nb, kb = self._wire_geometry(padded, self.fraction)
             if self.client_axes:

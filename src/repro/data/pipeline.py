@@ -305,6 +305,52 @@ def make_batch_stream(data: Mapping[str, Any], sampler: ReshuffleSampler, *,
 
 
 # ---------------------------------------------------------------------------
+# slot streams (production DIANA-RR: which shift slot each round touches)
+# ---------------------------------------------------------------------------
+
+def slots_for_step(sampler: ReshuffleSampler, step: int,
+                   local_steps: int = 1) -> np.ndarray:
+    """(M, local_steps) batch indices consumed by train step `step`.
+
+    Pure function of the stateless sampler — exactly the columns
+    `BatchStream` gathers for that step, epoch-boundary straddling
+    included, so a resumed run derives the same slots from its cursor.
+    """
+    return EpochIterator(sampler, start=step * local_steps).take(local_steps)
+
+
+def shared_slots_for_step(sampler: ReshuffleSampler, step: int,
+                          local_steps: int = 1, *,
+                          n_slots: int | None = None) -> np.ndarray:
+    """(local_steps,) SHARED slot indices for train step `step`.
+
+    The production per-slot wire needs every client of a wire level on the
+    same slot per round (DESIGN.md §3.8); that requires a sampler whose
+    epoch orders agree across clients (`mode='rr_shared'`, or trivially
+    m == 1). Raises when the clients' orders diverge rather than silently
+    de-aligning shift slots from the batches actually consumed.
+
+    Pass `n_slots` (the wire's `CompressedAggregation.n_slots`) to verify
+    the shift tables cover the sampler's index range — an out-of-range
+    slot would be CLAMPED by the device gather/scatter onto the last table
+    row, silently corrupting that control variate.
+    """
+    if n_slots is not None and sampler.n > n_slots:
+        raise ValueError(
+            f"sampler draws batch indices in [0, {sampler.n}) but the wire "
+            f"has only n_slots={n_slots} shift rows — out-of-range slots "
+            "would silently clamp onto the last row; build the aggregation "
+            "with n_slots == sampler.n")
+    cols = slots_for_step(sampler, step, local_steps)
+    if not (cols == cols[:1]).all():
+        raise ValueError(
+            f"sampler mode {sampler.mode!r} gives clients different batch "
+            "orders — the per-slot wire needs a shared order; use "
+            "ReshuffleSampler(mode='rr_shared')")
+    return cols[0]
+
+
+# ---------------------------------------------------------------------------
 # simulator + dry-run entry points (the same order source, other consumers)
 # ---------------------------------------------------------------------------
 

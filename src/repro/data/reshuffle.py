@@ -30,12 +30,18 @@ class ReshuffleSampler:
       'rr_once' — single permutation sampled at epoch 0 and reused (Shuffle-
               Once; the paper uses this for DIANA-RR so shift slots stay
               aligned with datapoints)
+      'rr_shared' — fresh permutation per epoch, SHARED by every client
+              (synchronized reshuffling). This is the production DIANA-RR
+              order: the wire's per-slot shift tables need every rank of a
+              wire level on the same slot each round (DESIGN.md §3.8), so
+              all clients walk their (different) local datasets in the same
+              index order.
       'wr'  — with-replacement sampling (QSGD/DIANA/FedAvg baselines)
     """
 
     def __init__(self, num_clients: int, num_batches: int, *, mode: str = "rr",
                  seed: int = 0):
-        if mode not in ("rr", "rr_once", "wr"):
+        if mode not in ("rr", "rr_once", "rr_shared", "wr"):
             raise ValueError(mode)
         self.m = num_clients
         self.n = num_batches
@@ -58,6 +64,9 @@ class ReshuffleSampler:
         rng = self._rng(epoch)
         if self.mode == "wr":
             return rng.integers(0, self.n, size=(self.m, self.n)).astype(np.int32)
+        if self.mode == "rr_shared":
+            one = rng.permutation(self.n).astype(np.int32)
+            return np.broadcast_to(one, (self.m, self.n)).copy()
         return np.stack(
             [rng.permutation(self.n) for _ in range(self.m)]
         ).astype(np.int32)

@@ -21,6 +21,7 @@ import time
 import traceback
 
 import jax
+import jax.numpy as jnp
 
 from repro.launch import compat
 
@@ -60,7 +61,11 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
         batch = abstract_stream_batch(specs["batch"], local_steps)
         key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
         with compat.set_mesh(mesh):
-            lowered = jitted.lower(abstract, batch, key)
+            if agg.rule.slotted:  # per-slot methods take the slot vector
+                slots = jax.ShapeDtypeStruct((local_steps,), jnp.int32)
+                lowered = jitted.lower(abstract, batch, key, slots)
+            else:
+                lowered = jitted.lower(abstract, batch, key)
     elif shape.kind == "prefill":
         prefill, lower_args = steps.make_prefill_step(
             cfg, mesh, cache_len=shape.seq_len, remat=remat, unroll=unroll
@@ -116,8 +121,11 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     m = num_clients(mesh)
+    # diana_rr at the dry-run scale: a representative 8-slot shift table
+    # (the real n comes from the data; the compile only needs the layout)
     agg = CompressedAggregation(method=agg_method, wire=agg_wire,
-                                fraction=fraction)
+                                fraction=fraction,
+                                n_slots=8 if agg_method == "diana_rr" else 1)
     n_dev = mesh.devices.size
 
     # 1) full-depth scan compile: the dry-run proper + memory analysis
@@ -196,8 +204,8 @@ def main(argv=None):
                     default="single")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) combination")
-    ap.add_argument("--agg", default="diana",
-                    choices=("dense", "q", "diana"))
+    ap.add_argument("--agg", "--method", default="diana",
+                    choices=("dense", "q", "diana", "diana_rr", "ef"))
     ap.add_argument("--wire", default="shared",
                     choices=("shared", "independent"))
     ap.add_argument("--fraction", type=float, default=0.02)

@@ -88,27 +88,47 @@ def param_shardings(mesh, params) -> Any:
                         param_specs(params, mesh=mesh))
 
 
-def shifts_specs(params, client_axes: tuple[str, ...], *, mesh=None) -> Any:
-    """DIANA per-client shifts: leading client axis over ('pod','data')."""
+def shifts_specs(params, client_axes: tuple[str, ...], *, mesh=None,
+                 n_slots: int = 0) -> Any:
+    """DIANA per-client shifts: leading client axis over ('pod','data').
+
+    n_slots >= 1 (DIANA-RR slot tables, leaves (M, n_slots, *param))
+    inserts a replicated slot axis between the client axis and the param
+    spec — the axis is present whenever the RULE is slotted, size-1 tables
+    included; 0 means no slot axis (non-slotted rules)."""
     msize = _model_size(mesh)
+    slot = (None,) if n_slots else ()
 
     def shift_spec(path, leaf):
         base = _leaf_spec(path, leaf, msize)
-        return P(client_axes, *base)
+        return P(client_axes, *slot, *base)
 
     return jax.tree_util.tree_map_with_path(shift_spec, params)
 
 
-def podded_specs(params, pod_axes: tuple[str, ...], *, mesh=None) -> Any:
+def podded_specs(params, pod_axes: tuple[str, ...], *, mesh=None,
+                 n_slots: int = 0) -> Any:
     """Per-pod state (level-2 DIANA shifts, per-pod mean shifts, local NASTYA
-    params): leading pod axis + the leaf's own TP spec."""
+    params): leading pod axis + the leaf's own TP spec (replicated slot axis
+    inserted when n_slots >= 1; 0 = no slot axis)."""
     msize = _model_size(mesh)
+    slot = (None,) if n_slots else ()
 
     def spec(path, leaf):
         base = _leaf_spec(path, leaf, msize)
-        return P(pod_axes, *base)
+        return P(pod_axes, *slot, *base)
 
     return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def slotted_specs(params, *, mesh=None, n_slots: int = 0) -> Any:
+    """Param-aligned specs with a leading replicated slot axis (flat-mesh
+    DIANA-RR mean tables, global pod_mean_shift): leaves (n_slots, *param);
+    n_slots=0 degrades to plain param specs."""
+    msize = _model_size(mesh)
+    slot = (None,) if n_slots else ()
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: P(*slot, *_leaf_spec(p, l, msize)), params)
 
 
 def batch_specs(batch, client_axes: tuple[str, ...]) -> Any:

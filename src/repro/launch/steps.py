@@ -52,13 +52,19 @@ from repro.optim import optimizers as optim
 
 
 class TrainState(NamedTuple):
+    """Production train state. Shift-table layouts follow the aggregation
+    method's rule (repro.core.rules): 'diana' keeps one (M, *param) shift
+    per client; 'diana_rr' inserts an n_slots axis after the client/pod
+    axis on every table ((M, n_slots, *param) etc.); 'ef' keeps only the
+    per-client residual in `shifts` (mean tables None)."""
+
     params: Any
-    shifts: Any  # (M, *param) intra-pod DIANA shifts, or None
-    mean_shift: Any  # per-pod mean shift: (P, *param) on pod meshes, else (*param)
+    shifts: Any  # (M, [n_slots,] *param) intra-pod shift/residual, or None
+    mean_shift: Any  # per-pod mean: (P, [ns,] *param) on pod meshes, else ([ns,] *param)
     step: jax.Array
     opt_state: Any = ()  # server optimizer state (paper uses plain SGD)
-    pod_shifts: Any = None  # (P, *param) inter-pod DIANA shifts, or None
-    pod_mean_shift: Any = None  # (*param) global mean of pod shifts, or None
+    pod_shifts: Any = None  # (P, [ns,] *param) inter-pod shifts, or None
+    pod_mean_shift: Any = None  # ([ns,] *param) global mean of pod shifts, or None
 
 
 def configure_agg(agg: CompressedAggregation, mesh,
@@ -72,14 +78,17 @@ def configure_agg(agg: CompressedAggregation, mesh,
       per epoch over the client axes);
     - flat mesh, no local steps: the single-level wire, unchanged.
     """
+    # on NASTYA paths the inter-pod wire only carries the slot-free epoch
+    # gradient (row 0), so outer slot tables collapse to one row
+    pod_slots = 1 if local_steps > 1 else agg.pod_slots
     if _pod_axes(mesh):
         return dataclasses.replace(
             agg, client_axes=_data_axes(mesh), pod_axes=_pod_axes(mesh),
-            pod_size=num_pods(mesh))
+            pod_size=num_pods(mesh), pod_slots=pod_slots)
     if local_steps > 1:
         return dataclasses.replace(
             agg, client_axes=(), pod_axes=_client_axes(mesh),
-            pod_size=num_clients(mesh))
+            pod_size=num_clients(mesh), pod_slots=pod_slots)
     return dataclasses.replace(agg, client_axes=_client_axes(mesh),
                                pod_axes=(), pod_size=1)
 
@@ -113,18 +122,20 @@ def init_train_state(key, cfg: ArchConfig, agg: CompressedAggregation,
         agg = configure_agg(agg, mesh, local_steps)
     params = transformer.init_params(key, cfg)
     shifts = mean_shift = pod_shifts = pod_mean_shift = None
-    if agg.method == "diana":
-        zeros = lambda shape: jnp.zeros(shape, agg.shift_dtype)
+    rule = agg.rule
+    if rule.has_shifts:
+        init = lambda lead, ns: rule.init_shifts(
+            params, lead, n_slots=ns, dtype=agg.shift_dtype)
         n_pods_ = _outer_ranks(agg)
         if agg.client_axes:
-            shifts = jax.tree.map(lambda p: zeros((m,) + p.shape), params)
-            mean_shift = jax.tree.map(
-                lambda p: zeros(((n_pods_,) if agg.pod_axes else ()) + p.shape),
-                params)
+            shifts = init(m, agg.n_slots)
+            if rule.has_mean:
+                mean_shift = init(n_pods_ if agg.pod_axes else None,
+                                  agg.n_slots)
         if agg.pod_axes:
-            pod_shifts = jax.tree.map(
-                lambda p: zeros((n_pods_,) + p.shape), params)
-            pod_mean_shift = jax.tree.map(lambda p: zeros(p.shape), params)
+            pod_shifts = init(n_pods_, agg._pod_slots)
+            if rule.has_mean:
+                pod_mean_shift = init(None, agg._pod_slots)
     opt_state = _make_optimizer(optimizer, lr).init(params)
     return TrainState(params, shifts, mean_shift, jnp.zeros((), jnp.int32),
                       opt_state, pod_shifts, pod_mean_shift)
@@ -145,15 +156,25 @@ def train_state_shardings(mesh, state: TrainState, agg) -> TrainState:
     paxes = _pod_axes(mesh) or (agg.pod_axes if agg.pod_axes else ())
     ns = lambda spec: NamedSharding(mesh, spec)
     pspecs = sharding.param_specs(state.params, mesh=mesh)
+    # slot-axis presence is keyed on the RULE (size-1 tables still carry the
+    # axis); 0 means no axis. Outer-level tables may have fewer rows
+    # (configure_agg collapses them to 1 on NASTYA paths).
+    nslots = agg.n_slots if agg.rule.slotted else 0
+    pod_nslots = agg._pod_slots if agg.rule.slotted else 0
 
     def maybe(tree, spec_tree):
         return None if tree is None else jax.tree.map(ns, spec_tree)
 
     # mean_shift is per-pod (leading pod axis) on hierarchical wires
-    podded = (sharding.podded_specs(state.params, paxes, mesh=mesh)
+    podded = (sharding.podded_specs(state.params, paxes, mesh=mesh,
+                                    n_slots=nslots)
               if paxes else None)
+    podded_pod = (sharding.podded_specs(state.params, paxes, mesh=mesh,
+                                        n_slots=pod_nslots)
+                  if paxes else None)
+    slotted = sharding.slotted_specs(state.params, mesh=mesh, n_slots=nslots)
     ms_specs = podded if (state.mean_shift is not None and agg.pod_axes) \
-        else pspecs
+        else slotted
 
     # optimizer state: mu/nu shard like params, scalars replicated
     if state.opt_state == ():
@@ -170,12 +191,15 @@ def train_state_shardings(mesh, state: TrainState, agg) -> TrainState:
     return TrainState(
         params=jax.tree.map(ns, pspecs),
         shifts=maybe(state.shifts,
-                     sharding.shifts_specs(state.params, caxes, mesh=mesh)),
+                     sharding.shifts_specs(state.params, caxes, mesh=mesh,
+                                           n_slots=nslots)),
         mean_shift=maybe(state.mean_shift, ms_specs),
         step=ns(P()),
         opt_state=osh,
-        pod_shifts=maybe(state.pod_shifts, podded),
-        pod_mean_shift=maybe(state.pod_mean_shift, pspecs),
+        pod_shifts=maybe(state.pod_shifts, podded_pod),
+        pod_mean_shift=maybe(state.pod_mean_shift,
+                             sharding.slotted_specs(state.params, mesh=mesh,
+                                                    n_slots=pod_nslots)),
     )
 
 
@@ -198,6 +222,16 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     carry `local_steps` micro-batches per client, client-major
     (leading dim = M * local_steps * b).
 
+    Per-slot methods (`agg.method == "diana_rr"`) change the signature to
+    (state, batch, key, slots): `slots` is a (local_steps,) int32 vector of
+    the SHARED batch indices this step's micro-batches occupy in every
+    client's dataset — `data.pipeline.shared_slots_for_step` derives it
+    from the `rr_shared` sampler that also orders the batch stream. With
+    local_steps == 1 the single slot drives the round's shift-table row at
+    both wire levels; in NASTYA mode the slots ride the per-pod micro-epoch
+    permutation and index the intra-pod tables, while the inter-pod
+    exchange of the (slot-free) epoch gradient uses table row 0.
+
     optimizer: the SERVER update applied to the aggregated direction —
     "sgd" is the paper's Algorithms 2-5; "momentum"/"adamw" are the
     beyond-paper variants (state replicated over clients, TP over model).
@@ -217,7 +251,10 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     opt = _make_optimizer(optimizer, server_lr)
     loss_fn = partial(transformer.loss_fn, cfg=cfg, remat=remat,
                       unroll=unroll, ce=ce, seq_shard=seq_shard)
-    diana = agg.method == "diana"
+    stateful = agg.rule.has_shifts  # diana / diana_rr / ef keep wire memory
+    slotted = agg.rule.slotted
+    nslots = agg.n_slots if slotted else 0  # 0 = tables carry no slot axis
+    pod_nslots = agg._pod_slots if slotted else 0
 
     abstract = abstract_train_state(cfg, agg, m, optimizer=optimizer,
                                     mesh=mesh, local_steps=local_steps)
@@ -235,14 +272,27 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                                 out_specs=out_specs, axis_names=all_axes,
                                 check_vma=False)
 
-    # spec trees matching the (possibly None) state fields
+    # spec trees matching the (possibly None) state fields; slotted tables
+    # carry a replicated n_slots axis after the client/pod axis
     def tspec(tree, spec_tree):
         return None if tree is None else spec_tree
-    shifts_sp = tspec(abstract.shifts, stacked_specs)
+    shifts_sp = tspec(abstract.shifts,
+                      sharding.shifts_specs(abstract.params, mcaxes,
+                                            mesh=mesh, n_slots=nslots))
+    slotted_sp = sharding.slotted_specs(abstract.params, mesh=mesh,
+                                        n_slots=nslots)
+    podded_slot_sp = (sharding.podded_specs(abstract.params, pod_axis,
+                                            mesh=mesh, n_slots=nslots)
+                      if pod_axis else slotted_sp)
     ms_sp = tspec(abstract.mean_shift,
-                  podded_specs if pod_axis else pspecs)
-    psh_sp = tspec(abstract.pod_shifts, podded_specs)
-    pms_sp = tspec(abstract.pod_mean_shift, pspecs)
+                  podded_slot_sp if pod_axis else slotted_sp)
+    psh_sp = tspec(abstract.pod_shifts,
+                   sharding.podded_specs(abstract.params, pod_axis,
+                                         mesh=mesh, n_slots=pod_nslots)
+                   if pod_axis else None)
+    pms_sp = tspec(abstract.pod_mean_shift,
+                   sharding.slotted_specs(abstract.params, mesh=mesh,
+                                          n_slots=pod_nslots))
 
     strip = lambda t: None if t is None else jax.tree.map(lambda x: x[0], t)
     stack = lambda t: None if t is None else jax.tree.map(
@@ -266,51 +316,59 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
 
     # -- wire regions (fully-manual shard_map bodies) --------------------------
 
-    def full_wire_fn(g, shifts, mean_shift, pod_shifts, pod_mean_shift, kd):
+    def full_wire_fn(g, shifts, mean_shift, pod_shifts, pod_mean_shift, kd,
+                     slot):
         """Composed two-level exchange (the local_steps == 1 round)."""
         g = strip(g)
         dstate = DianaState(strip(shifts), strip_pod(mean_shift),
                             strip_pod(pod_shifts), pod_mean_shift) \
-            if diana else None
-        direction, nd = agg.aggregate(g, dstate, jax.random.wrap_key_data(kd))
-        if diana:
+            if stateful else None
+        direction, nd = agg.aggregate(g, dstate,
+                                      jax.random.wrap_key_data(kd), slot=slot)
+        if stateful:
             return (direction, stack(nd.shifts), stack_pod(nd.mean_shift),
                     stack_pod(nd.pod_shifts), nd.pod_mean_shift)
         return direction, shifts, mean_shift, pod_shifts, pod_mean_shift
 
     full_wire = manual(
         full_wire_fn,
-        in_specs=(stacked_specs, shifts_sp, ms_sp, psh_sp, pms_sp, P()),
+        in_specs=(stacked_specs, shifts_sp, ms_sp, psh_sp, pms_sp, P(), P()),
         out_specs=(pspecs, shifts_sp, ms_sp, psh_sp, pms_sp),
     )
 
-    def local_wire_fn(g, shifts, mean_shift, kd):
-        """Inner (intra-pod) exchange — one NASTYA local step's psum."""
+    def local_wire_fn(g, shifts, mean_shift, kd, slot):
+        """Inner (intra-pod) exchange — one NASTYA local step's psum.
+
+        `slot` arrives per-pod (spec P(pod_axis)): the micro-batch's shared
+        batch index after the pod's own micro-epoch permutation."""
         g = strip(g)
         dstate = DianaState(strip(shifts), strip_pod(mean_shift)) \
-            if diana else None
+            if stateful else None
         direction, nd = agg.aggregate_local(g, dstate,
-                                            jax.random.wrap_key_data(kd))
+                                            jax.random.wrap_key_data(kd),
+                                            slot=slot[0])
         new_shifts, new_ms = (stack(nd.shifts), stack_pod(nd.mean_shift)) \
-            if diana else (shifts, mean_shift)
+            if stateful else (shifts, mean_shift)
         # direction is identical on every rank of a pod; emit the pod block
         # (local_wire only exists on NASTYA paths, where pod_axis is set)
         return stack(direction), new_shifts, new_ms
 
+    pod_lead = P(pod_axis) if pod_axis else P()
     local_wire = manual(
         local_wire_fn,
-        in_specs=(stacked_specs, shifts_sp, ms_sp, P()),
+        in_specs=(stacked_specs, shifts_sp, ms_sp, P(), pod_lead),
         out_specs=(podded_specs, shifts_sp, ms_sp),
     )
 
     def pod_wire_fn(g_pod, pod_shifts, pod_mean_shift, kd):
-        """Outer (inter-pod) exchange of the NASTYA epoch gradient."""
+        """Outer (inter-pod) exchange of the NASTYA epoch gradient (no batch
+        slot — per-slot rules use table row 0 here)."""
         g = strip_pod(g_pod) if pod_axis else strip(g_pod)
         dstate = DianaState(None, None, strip_pod(pod_shifts),
-                            pod_mean_shift) if diana else None
+                            pod_mean_shift) if stateful else None
         direction, nd = agg.aggregate_pod(g, dstate,
                                           jax.random.wrap_key_data(kd))
-        if diana:
+        if stateful:
             return direction, stack_pod(nd.pod_shifts), nd.pod_mean_shift
         return direction, pod_shifts, pod_mean_shift
 
@@ -322,7 +380,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
 
     # -- the step ---------------------------------------------------------------
 
-    def nastya_epoch(state: TrainState, batch, rkey):
+    def nastya_epoch(state: TrainState, batch, rkey, slots):
         """local_steps local RR mini-epochs per pod + one inter-pod round."""
         bsz = jax.tree.leaves(batch)[0].shape[0] // (m * local_steps)
         batch_r = jax.tree.map(
@@ -330,19 +388,24 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         bspecs = jax.tree.map(
             lambda x: P(mcaxes, *(None,) * (x.ndim - 1)), batch_r)
 
-        def permute_fn(b, kd):
+        def permute_fn(b, sl, kd):
             # per-pod RR order over the local micro-epochs (Alg. 4 line 5);
-            # device-local gather — every rank of a pod draws the same order
+            # device-local gather — every rank of a pod draws the same
+            # order. The shared slot indices ride the same permutation so
+            # per-slot shift tables stay aligned with the batches consumed.
             key = jax.random.wrap_key_data(kd)
             for ax in pod_axis:
                 key = jax.random.fold_in(key, lax.axis_index(ax))
             perm = jax.random.permutation(key, local_steps)
-            return jax.tree.map(lambda x: x[:, perm], b)
+            return jax.tree.map(lambda x: x[:, perm], b), sl[perm][None]
 
-        batch_r = manual(permute_fn, in_specs=(bspecs, P()),
-                         out_specs=bspecs)(
-            batch_r, jax.random.key_data(jax.random.fold_in(rkey, 1)))
+        batch_r, slots_pod = manual(
+            permute_fn, in_specs=(bspecs, P(), P()),
+            out_specs=(bspecs, P(pod_axis if pod_axis else None, None)))(
+            batch_r, slots,
+            jax.random.key_data(jax.random.fold_in(rkey, 1)))
         xs = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), batch_r)
+        slot_cols = jnp.moveaxis(slots_pod, 1, 0)  # (local_steps, n_pods)
 
         x_pods = jax.lax.with_sharding_constraint(
             jax.tree.map(
@@ -352,7 +415,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
 
         def body(carry, inp):
             x, shifts, mean_shift = carry
-            batch_j, t = inp
+            batch_j, slot_j, t = inp
             x_clients = jax.lax.with_sharding_constraint(
                 jax.tree.map(
                     lambda p: jnp.repeat(p, clients_per_pod, axis=0), x),
@@ -360,7 +423,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
             losses, g = grads_and_loss(x_clients, batch_j)
             kd = jax.random.key_data(jax.random.fold_in(rkey, 2 + t))
             direction, shifts, mean_shift = local_wire(
-                g, shifts, mean_shift, kd)
+                g, shifts, mean_shift, kd, slot_j)
             x = jax.tree.map(
                 lambda xi, d: (xi.astype(jnp.float32)
                                - gamma * d.astype(jnp.float32)
@@ -369,7 +432,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
 
         (x_pods, new_shifts, new_ms), losses = lax.scan(
             body, (x_pods, state.shifts, state.mean_shift),
-            (xs, jnp.arange(local_steps)))
+            (xs, slot_cols, jnp.arange(local_steps)))
 
         # g_pod = (x_t - x_t^n) / (gamma * n)   (Alg. 4/5 line 7)
         g_pod = jax.tree.map(
@@ -385,7 +448,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         return (direction, new_shifts, new_ms, new_psh, new_pms,
                 jnp.mean(losses), gnorm)
 
-    def flat_round(state: TrainState, batch, rkey):
+    def flat_round(state: TrainState, batch, rkey, slots):
         """One communication round (Algorithms 2-3 / the composed wire)."""
         bsz = jax.tree.leaves(batch)[0].shape[0] // m
         batch_c = jax.tree.map(
@@ -393,7 +456,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         losses, g = grads_and_loss(broadcast_clients(state.params), batch_c)
         direction, new_shifts, new_ms, new_psh, new_pms = full_wire(
             g, state.shifts, state.mean_shift, state.pod_shifts,
-            state.pod_mean_shift, jax.random.key_data(rkey))
+            state.pod_mean_shift, jax.random.key_data(rkey), slots[0])
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(x.astype(jnp.float32)))
             for x in jax.tree.leaves(g)) / m)
@@ -419,12 +482,20 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                 "client-major (m * local_steps * b)-row batches; feed it "
                 "with data.pipeline.make_batch_stream")
 
-    def step(state: TrainState, batch, key):
+    def step(state: TrainState, batch, key, slots):
         check_batch(batch)
+        if slots is None:
+            slots = jnp.zeros((local_steps,), jnp.int32)
+        slots = jnp.asarray(slots, jnp.int32)
+        if slots.shape != (local_steps,):
+            raise ValueError(
+                f"slots must be a ({local_steps},) int32 vector of shared "
+                f"batch indices (one per local micro-step), got "
+                f"{slots.shape} — see data.pipeline.shared_slots_for_step")
         rkey = jax.random.fold_in(key, state.step)
         round_fn = nastya_epoch if local_steps > 1 else flat_round
         (direction, new_shifts, new_ms, new_psh, new_pms, loss,
-         gnorm) = round_fn(state, batch, rkey)
+         gnorm) = round_fn(state, batch, rkey, slots)
         updates, new_opt = opt.update(
             jax.tree.map(lambda d: d.astype(jnp.float32), direction),
             state.opt_state, state.params)
@@ -437,12 +508,22 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     batch_sh = lambda batch: jax.tree.map(
         lambda x: NamedSharding(mesh, P(mcaxes, *(None,) * (x.ndim - 1))),
         batch)
-    jitted = jax.jit(
-        step,
-        in_shardings=(shardings, None, None),
-        out_shardings=(shardings, None),
-        donate_argnums=(0,),
-    )
+    if slotted:
+        # per-slot methods take the round's shared slot vector as a fourth
+        # argument; slot-free methods keep the 3-arg signature unchanged
+        jitted = jax.jit(
+            step,
+            in_shardings=(shardings, None, None, None),
+            out_shardings=(shardings, None),
+            donate_argnums=(0,),
+        )
+    else:
+        jitted = jax.jit(
+            lambda state, batch, key: step(state, batch, key, None),
+            in_shardings=(shardings, None, None),
+            out_shardings=(shardings, None),
+            donate_argnums=(0,),
+        )
     return jitted, abstract, shardings, batch_sh
 
 

@@ -28,7 +28,7 @@ import numpy as np
 from repro.checkpoint import load_meta, restore_train_state, save_pytree
 from repro.configs import ARCH_NAMES, get_config, reduced
 from repro.core.dist import CompressedAggregation
-from repro.data.pipeline import make_batch_stream
+from repro.data.pipeline import make_batch_stream, shared_slots_for_step
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
 from repro.launch import steps
@@ -70,7 +70,12 @@ def main():
     ap.add_argument("--eta", type=float, default=None,
                     help="server stepsize for --local-steps>1 "
                          "(default gamma*local_steps = FedRR equivalence)")
-    ap.add_argument("--agg", choices=("diana", "q", "dense"), default="diana")
+    ap.add_argument("--agg", "--method",
+                    choices=("diana", "q", "dense", "diana_rr", "ef"),
+                    default="diana",
+                    help="wire aggregation method; 'diana_rr' runs the "
+                         "paper's per-slot shifts (Algorithm 3) and needs "
+                         "--sampling rr_shared, 'ef' is error feedback")
     ap.add_argument("--wire", choices=("shared", "independent"), default="shared")
     ap.add_argument("--fraction", type=float, default=0.05)
     ap.add_argument("--pods", type=int, default=1,
@@ -78,7 +83,8 @@ def main():
                          "('pod','data','model') mesh for the two-level wire")
     ap.add_argument("--optimizer", choices=("sgd", "momentum", "adamw"),
                     default="sgd")
-    ap.add_argument("--sampling", choices=("rr", "rr_once", "wr"), default="rr")
+    ap.add_argument("--sampling", choices=("rr", "rr_once", "rr_shared", "wr"),
+                    default="rr")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--checkpoint", default=None, help="save state here at end")
@@ -104,8 +110,16 @@ def main():
         mesh = make_test_mesh((4, 2), ("data", "model"))
         cfg = reduced(get_config(args.arch), seq=args.seq)
     m = num_clients(mesh)
+    n_batches = 8
+    slotted = args.agg == "diana_rr"
+    if slotted and args.sampling != "rr_shared":
+        ap.error("--agg diana_rr needs --sampling rr_shared: the per-slot "
+                 "wire reads/writes one shared shift-table row per round, "
+                 "so every client must walk its data in the same index "
+                 "order (DESIGN.md §3.8)")
     agg = CompressedAggregation(method=args.agg, wire=args.wire,
                                 fraction=args.fraction,
+                                n_slots=n_batches if slotted else 1,
                                 shift_dtype=jnp.float32)
     remat = "full" if args.production_mesh else False
     jitted, abstract, shardings, batch_sh = steps.make_train_step(
@@ -117,7 +131,6 @@ def main():
           f"agg={args.agg}/{args.wire} k/d={args.fraction} "
           f"local_steps={args.local_steps} opt={args.optimizer}")
 
-    n_batches = 8
     b = max(1, args.batch // m)
     data = {"tokens": synthetic_token_batches(
         vocab=cfg.vocab, seq_len=args.seq, batch=b,
@@ -161,7 +174,14 @@ def main():
             prefetch=args.prefetch, start_step=start_step)
         with stream:
             for t, batch in zip(range(start_step, args.steps), stream):
-                state, metrics = jitted(state, batch, key)
+                if slotted:
+                    # the shared slot stream is a pure function of the
+                    # stateless sampler, so --resume re-derives it exactly
+                    slots = jnp.asarray(shared_slots_for_step(
+                        sampler, t, args.local_steps, n_slots=agg.n_slots))
+                    state, metrics = jitted(state, batch, key, slots)
+                else:
+                    state, metrics = jitted(state, batch, key)
                 if t % args.log_every == 0 or t == args.steps - 1:
                     print(f"step {t:5d} | loss {float(metrics['loss']):8.4f} | "
                           f"gnorm {float(metrics['grad_norm']):9.3f} | "

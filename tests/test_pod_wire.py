@@ -55,23 +55,33 @@ def _configure(agg, mesh):
     return configure_agg(agg, mesh)
 
 
-def _run_rounds(agg, mesh, rounds, *, grads=GRADS, seed=0):
-    """Last-round direction of `rounds` aggregate() calls (per-client fixed
-    gradients), executed inside the fully-manual wire region."""
+def _run_rounds(agg, mesh, rounds, *, grads=GRADS, seed=0, slots=None,
+                reduce="last"):
+    """Direction of `rounds` aggregate() calls (per-client fixed gradients),
+    executed inside the fully-manual wire region. `slots` is an optional
+    (rounds,) vector of shared slot ids for per-slot methods; `reduce` picks
+    the last round's direction or the running mean over rounds."""
     agg = _configure(agg, mesh)
     specs = _wire_specs(mesh, grads)
+    slot_seq = (jnp.zeros((rounds,), jnp.int32) if slots is None
+                else jnp.asarray(slots, jnp.int32))
 
     def body(g):
         g = jax.tree.map(lambda x: x[0], g)
         state = agg.init(g)
         key = jax.random.PRNGKey(seed)
 
-        def one(state, t):
-            d, state = agg.aggregate(g, state, jax.random.fold_in(key, t))
+        def one(state, inp):
+            t, slot = inp
+            d, state = agg.aggregate(g, state, jax.random.fold_in(key, t),
+                                     slot=slot)
             return state, d
 
-        _, ds = jax.lax.scan(one, state, jnp.arange(rounds))
-        d = jax.tree.map(lambda x: x[-1], ds)
+        _, ds = jax.lax.scan(one, state, (jnp.arange(rounds), slot_seq))
+        if reduce == "mean":
+            d = jax.tree.map(lambda x: jnp.mean(x, axis=0), ds)
+        else:
+            d = jax.tree.map(lambda x: x[-1], ds)
         return jax.tree.map(lambda x: x[None], d)
 
     out = jax.jit(_shard_map(body, mesh, (specs,), specs))(grads)
@@ -82,15 +92,18 @@ def _run_rounds(agg, mesh, rounds, *, grads=GRADS, seed=0):
 # parity: 1-pod two-level == flat single-level, bitwise
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("method", ["q", "diana"])
+@pytest.mark.parametrize("method", ["q", "diana", "diana_rr", "ef"])
 def test_one_pod_two_level_bit_matches_flat(method, mesh_4x2, mesh_1x4x2):
     """A single pod has no inter-pod link: the outer exchange is the exact
     identity, and the inner exchange draws the very same keys as the flat
-    wire — the acceptance-criteria bit-match."""
+    wire — the acceptance-criteria bit-match. Holds for every shift rule,
+    per-slot tables and error-feedback residuals included."""
     agg = CompressedAggregation(method=method, wire="shared", fraction=0.25,
+                                n_slots=3 if method == "diana_rr" else 1,
                                 shift_dtype=jnp.float32)
-    flat = _run_rounds(agg, mesh_4x2, 7)
-    two = _run_rounds(agg, mesh_1x4x2, 7)
+    slots = np.arange(7) % 3 if method == "diana_rr" else None
+    flat = _run_rounds(agg, mesh_4x2, 7, slots=slots)
+    two = _run_rounds(agg, mesh_1x4x2, 7, slots=slots)
     for k in GRADS:
         assert np.array_equal(np.asarray(flat[k]), np.asarray(two[k])), k
 
@@ -204,6 +217,154 @@ def test_one_level_alone_leaves_interpod_noise(mesh_2x2x2):
     agg = CompressedAggregation(method="q", wire="shared", fraction=0.25)
     got = _run_rounds(agg, mesh_2x2x2, 300, grads=grads)
     assert float(np.abs(np.asarray(got["w"]) - mean).max()) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# per-slot (diana_rr) and error-feedback (ef) rules on the production wire
+# ---------------------------------------------------------------------------
+
+def _logreg_grads():
+    prob = make_federated_logreg(m=4, n_batches=2, batch=4, d=64, cond=50.0,
+                                 seed=1)
+    loss = prob.loss_fn()
+    w0 = {"w": jnp.zeros((prob.d,), jnp.float32)}
+    grads = {"w": jax.vmap(
+        lambda a, y: jax.grad(loss)(w0, {"a": a.reshape(-1, prob.d),
+                                         "y": y.reshape(-1)})
+    )(prob.data["a"], prob.data["y"])["w"]}
+    return grads, np.asarray(grads["w"]).mean(0)
+
+
+def test_per_slot_shifts_reach_fixed_point(mesh_2x2x2):
+    """diana_rr on the two-level wire: every slot's control variates kill
+    their compressed residual, so the direction converges to the exact mean
+    no matter which slot a round lands on (Theorem 2 logic per slot)."""
+    grads, mean = _logreg_grads()
+    n_slots = 3
+    agg = CompressedAggregation(method="diana_rr", wire="shared",
+                                fraction=0.25, n_slots=n_slots,
+                                shift_dtype=jnp.float32)
+    got = _run_rounds(agg, mesh_2x2x2, 450, grads=grads,
+                      slots=np.arange(450) % n_slots)
+    np.testing.assert_allclose(np.asarray(got["w"]), mean, atol=1e-5)
+
+
+def test_ef_wire_fixed_point_on_logreg(mesh_4x2):
+    """Error feedback on the wire: the residual memory telescopes, so the
+    RUNNING MEAN of the directions converges to the exact gradient mean at
+    rate ||e_T||/T — while the memory-free 'q' wire's mean keeps the
+    compression noise floor. (The EF remedy the paper cites, now production.)
+    """
+    grads, mean = _logreg_grads()
+    agg = CompressedAggregation(method="ef", wire="shared", fraction=0.25,
+                                shift_dtype=jnp.float32)
+    got = _run_rounds(agg, mesh_4x2, 300, grads=grads, reduce="mean")
+    scale = float(np.abs(mean).max())
+    err_ef = float(np.abs(np.asarray(got["w"]) - mean).max())
+    assert err_ef < 0.02 * scale + 1e-4, (err_ef, scale)
+
+
+def test_per_slot_wire_matches_simulator_and_pipeline_order(mesh_4x2):
+    """The acceptance cross-check: the flat-mesh `diana_rr` pod wire and the
+    simulator's `make_epoch_fn("diana_rr")` walk the SAME trajectory at
+    fraction=1.0 (exact compression), fed by the same `rr_shared` sampler —
+    params AND the full per-slot shift tables agree, which also pins the
+    wire's slot selection to the pipeline's epoch order."""
+    from repro.core.algorithms import ALGORITHMS, init_algorithm, make_epoch_fn
+    from repro.compression.ops import RandK
+    from repro.data.pipeline import make_batch_stream, run_epochs, \
+        shared_slots_for_step
+    from repro.data.reshuffle import ReshuffleSampler
+    from repro.launch import steps
+    from repro.launch.mesh import num_clients
+    from repro.models import transformer
+
+    cfg = _tiny_cfg()
+    mesh = mesh_4x2
+    m = num_clients(mesh)
+    n, seq = 3, 8
+    gamma, alpha = 0.02, 0.5
+    epochs = 2
+
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, size=(m, n, 1, seq + 1))  # (M,n,b,S+1)
+    sim_data = {"tokens": jnp.asarray(tokens, jnp.int32)}
+    sampler = ReshuffleSampler(m, n, mode="rr_shared", seed=5)
+
+    loss_fn = lambda p, b: transformer.loss_fn(p, b, cfg, remat=False,
+                                               seq_shard=False)
+    params0 = transformer.init_params(jax.random.key(0), cfg)
+
+    # --- simulator: run_epochs feeds the sampler's shared order -----------
+    spec, epoch = make_epoch_fn("diana_rr", loss_fn, RandK(fraction=1.0),
+                                gamma=gamma, alpha=alpha)
+    sim = init_algorithm(ALGORITHMS["diana_rr"], params0, m, n)
+    sim = run_epochs(epoch, sim, sim_data, sampler, epochs=epochs,
+                     key=jax.random.PRNGKey(7))
+
+    # --- production: one wire round per step, slots from the same sampler --
+    agg = CompressedAggregation(method="diana_rr", wire="shared",
+                                fraction=1.0, alpha=alpha, n_slots=n,
+                                shift_dtype=jnp.float32)
+    jitted, abstract, shardings, batch_sh = steps.make_train_step(
+        cfg, mesh, agg=agg, lr=gamma, remat=False, seq_shard=False)
+    stream = make_batch_stream(
+        {"tokens": tokens.astype(np.int32)}, sampler, prefetch=False)
+    with compat.set_mesh(mesh), stream:
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m, lr=gamma,
+                                   mesh=mesh), shardings)
+        for t in range(epochs * n):
+            slots = jnp.asarray(shared_slots_for_step(sampler, t))
+            state, _ = jitted(state, next(stream), jax.random.key(3), slots)
+
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(sim.params),
+            jax.tree_util.tree_leaves_with_path(state.params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=2e-4, rtol=2e-3, err_msg=str(pa))
+    # slot-selection coherence: the (M, n_slots, *param) tables themselves
+    # match — the wire touched exactly the slots the pipeline ordered. The
+    # tables integrate raw per-round gradients (no 1/M averaging), so they
+    # carry more reduction-order float noise than the params; a wrong slot
+    # would show up as O(0.1) row-level differences, not 1e-3 ripples.
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(sim.shifts),
+            jax.tree_util.tree_leaves_with_path(state.shifts)):
+        assert a.shape == b.shape, (pa, a.shape, b.shape)
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-3, rtol=5e-2, err_msg=str(pa))
+
+
+def test_per_slot_untouched_slots_stay_zero(mesh_4x2):
+    """Two rounds into a 4-slot table only the two visited rows move."""
+    from repro.launch.steps import configure_agg
+
+    agg = configure_agg(
+        CompressedAggregation(method="diana_rr", wire="shared", fraction=1.0,
+                              n_slots=4, shift_dtype=jnp.float32), mesh_4x2)
+    specs = _wire_specs(mesh_4x2, GRADS)
+    visited = (2, 0)
+
+    def body(g):
+        g = jax.tree.map(lambda x: x[0], g)
+        state = agg.init(g)
+        key = jax.random.PRNGKey(0)
+        for t, s in enumerate(visited):
+            _, state = agg.aggregate(g, state, jax.random.fold_in(key, t),
+                                     slot=jnp.int32(s))
+        return jax.tree.map(lambda x: x[None], state.shifts)
+
+    out_specs = jax.tree.map(
+        lambda s: P(s[0], None, *s[1:]), _wire_specs(mesh_4x2, GRADS))
+    shifts = jax.jit(_shard_map(body, mesh_4x2, (specs,), out_specs))(GRADS)
+    for k in GRADS:
+        table = np.asarray(shifts[k])  # (M, n_slots, ...)
+        for s in range(4):
+            touched = (np.abs(table[:, s]) > 0).any()
+            assert touched == (s in visited), (k, s)
 
 
 # ---------------------------------------------------------------------------
@@ -323,3 +484,42 @@ def test_nastya_two_pod_step_trains(mesh_2x2x2):
             losses.append(float(metrics["loss"]))
         assert np.isfinite(losses).all()
         assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_nastya_two_pod_diana_rr_trains(mesh_2x2x2):
+    """Acceptance: `CompressedAggregation(method="diana_rr")` on the 2-pod
+    NASTYA mesh — per-slot shifts on the intra-pod wire (slots riding the
+    per-pod micro-epoch permutation), single-shift row 0 on the inter-pod
+    epoch gradient — trains."""
+    from repro.configs import get_config, reduced
+    from repro.launch import steps
+    from repro.launch.mesh import num_clients
+
+    cfg = reduced(get_config("stablelm-1.6b"), seq=8)
+    mesh = mesh_2x2x2
+    m = num_clients(mesh)
+    local_steps = 2
+    agg = CompressedAggregation(method="diana_rr", wire="shared",
+                                fraction=0.5, n_slots=local_steps,
+                                shift_dtype=jnp.float32)
+    jitted, abstract, shardings, _ = steps.make_train_step(
+        cfg, mesh, agg=agg, lr=0.05, eta=0.2, local_steps=local_steps,
+        remat=False, seq_shard=False)
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m, mesh=mesh,
+                                   local_steps=local_steps), shardings)
+        batch = {"tokens": jax.random.randint(
+            jax.random.key(1), (m * local_steps * 2, 9), 0, cfg.vocab)}
+        slots = jnp.arange(local_steps, dtype=jnp.int32)
+        losses = []
+        for _ in range(10):
+            state, metrics = jitted(state, batch, jax.random.key(2), slots)
+            losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0] - 0.05, losses
+        # both levels hold slot tables; the inner level saw both slots
+        sh = np.asarray(jax.tree.leaves(state.shifts)[0])
+        assert sh.shape[1] == local_steps
+        assert (np.abs(sh) > 0).any(axis=tuple(range(2, sh.ndim))).all(), \
+            "every (client, slot) table row should have been touched"

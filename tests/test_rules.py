@@ -1,0 +1,307 @@
+"""Unit tests of the shared shift-rule layer (repro.core.rules) and the
+satellite fixes that ride with it: the Kahan bits accounting, the
+`ef_topk_rr` theory stepsize, the simplified default-compressor condition,
+and the shared-order sampler/slot helpers the per-slot wire consumes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression.backend import CompressionBackend
+from repro.core.api import accumulate_bits, init_state
+from repro.core.rules import RULES, WIRE_RULES, get_rule
+
+BACKENDS = [CompressionBackend("reference"), CompressionBackend("pallas")]
+
+
+# ---------------------------------------------------------------------------
+# layouts
+# ---------------------------------------------------------------------------
+
+def test_rule_registry():
+    assert set(RULES) == {"none", "single", "per_slot", "ef"}
+    assert set(WIRE_RULES) == {"dense", "q", "diana", "diana_rr", "ef"}
+    with pytest.raises(ValueError):
+        get_rule("banana")
+
+
+def test_init_shift_layouts():
+    params = {"w": jnp.zeros((5, 3)), "b": jnp.zeros((2,))}
+    m, n = 4, 6
+    assert get_rule("none").init_shifts(params, m, n_slots=n) is None
+    single = get_rule("single").init_shifts(params, m, n_slots=n)
+    assert single["w"].shape == (m, 5, 3)
+    slot = get_rule("per_slot").init_shifts(params, m, n_slots=n)
+    assert slot["w"].shape == (m, n, 5, 3) and slot["b"].shape == (m, n, 2)
+    ef = get_rule("ef").init_shifts(params, m, n_slots=n)
+    assert ef["w"].shape == (m, 5, 3)
+    # wire layout: m=None drops the client axis (the mesh is the client axis)
+    wire = get_rule("per_slot").init_shifts(params, None, n_slots=n,
+                                            dtype=jnp.bfloat16)
+    assert wire["w"].shape == (n, 5, 3) and wire["w"].dtype == jnp.bfloat16
+    assert get_rule("single").init_shifts(params, None)["w"].shape == (5, 3)
+
+
+# ---------------------------------------------------------------------------
+# arithmetic: each rule's select/payload/update/scatter against hand math
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("be", BACKENDS, ids=lambda b: b.name)
+def test_single_shift_round_matches_hand_math(be):
+    rule = get_rule("single")
+    rng = np.random.default_rng(0)
+    h = {"w": jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)}
+    alpha = 0.25
+    sel = rule.select(h, None)
+    p = rule.payload(g, sel, gamma=0.1)
+    np.testing.assert_allclose(np.asarray(p["w"]),
+                               np.asarray(g["w"] - h["w"]), rtol=1e-6)
+    ghat, h_new, _ = rule.update(sel, p, sel, p, alpha=alpha, backend=be)
+    np.testing.assert_allclose(np.asarray(ghat["w"]), np.asarray(g["w"]),
+                               atol=1e-6)  # h + (g - h)
+    np.testing.assert_allclose(np.asarray(h_new["w"]),
+                               np.asarray(h["w"] + alpha * p["w"]), atol=1e-6)
+    assert rule.scatter(h, None, h_new) is h_new
+
+
+@pytest.mark.parametrize("be", BACKENDS, ids=lambda b: b.name)
+def test_per_slot_round_touches_only_its_slot(be):
+    rule = get_rule("per_slot")
+    m, n, d = 3, 4, 8
+    rng = np.random.default_rng(1)
+    shifts = {"w": jnp.asarray(rng.normal(size=(m, n, d)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
+    col = jnp.asarray([2, 0, 3])
+    idx = (jnp.arange(m), col)
+    alpha = 0.5
+    h = rule.select(shifts, idx)
+    assert h["w"].shape == (m, d)
+    np.testing.assert_array_equal(np.asarray(h["w"][1]),
+                                  np.asarray(shifts["w"][1, 0]))
+    p = rule.payload(g, h)
+    _, h_new, _ = rule.update(h, p, h, p, alpha=alpha, backend=be)
+    out = rule.scatter(shifts, idx, h_new)
+    got = np.asarray(out["w"])
+    want = np.asarray(shifts["w"]).copy()
+    for i, s in enumerate(np.asarray(col)):
+        want[i, s] += alpha * np.asarray(p["w"][i])
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_ef_rule_residual_and_direction():
+    rule = get_rule("ef")
+    be = BACKENDS[0]
+    e = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    g = {"w": jnp.asarray([0.5, 4.0, -1.0])}
+    gamma = 0.2
+    p = rule.payload(g, e, gamma=gamma)
+    np.testing.assert_allclose(np.asarray(p["w"]),
+                               gamma * np.asarray(g["w"]) + np.asarray(e["w"]))
+    q = {"w": jnp.asarray([0.6, 0.0, -0.9])}  # a pretend compression of p
+    d, e_new, _ = rule.update(e, q, None, q, alpha=0.0, gamma=gamma,
+                              backend=be, payload=p)
+    np.testing.assert_allclose(np.asarray(d["w"]), np.asarray(q["w"]) / gamma)
+    np.testing.assert_allclose(np.asarray(e_new["w"]),
+                               np.asarray(p["w"]) - np.asarray(q["w"]))
+    assert rule.contractive  # the wire must NOT apply the d/k scaling
+
+
+def test_local_family_direction_single_shift():
+    rule = get_rule("single")
+    be = BACKENDS[0]
+    H = {"w": jnp.asarray([1.0, 2.0])}
+    mq = {"w": jnp.asarray([0.5, -0.5])}
+    d, H_new = rule.direction(H, mq, alpha=0.5, backend=be)
+    np.testing.assert_allclose(np.asarray(d["w"]), [1.5, 1.5])
+    np.testing.assert_allclose(np.asarray(H_new["w"]), [1.25, 1.75])
+    # NoShift: pass-through server side
+    d2, H2 = get_rule("none").direction(None, mq, alpha=0.5, backend=be)
+    assert d2 is mq and H2 is None
+
+
+def test_local_family_rejects_slot_and_ef_rules():
+    from repro.core.algorithms import ALGORITHMS, make_epoch_fn
+    import dataclasses
+
+    spec = dataclasses.replace(ALGORITHMS["q_nastya"], shift_mode="per_slot")
+    loss = lambda p, b: jnp.sum(p["w"] ** 2)
+    from repro.core.algorithms import _local_epoch
+    from repro.compression.backend import get_backend
+
+    state = init_state({"w": jnp.zeros((3,))})
+    data = {"x": jnp.zeros((2, 2, 1))}
+    with pytest.raises(ValueError, match="local-family"):
+        _local_epoch(spec, loss, None, 0.1, 0.1, 0.5, get_backend("reference"),
+                     state, data, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# satellite: Kahan bits accounting keeps counting past the f32 mantissa
+# ---------------------------------------------------------------------------
+
+def test_accumulate_bits_past_f32_mantissa():
+    start = jnp.float32(2.0 ** 24)
+    inc = jnp.float32(1.0)  # 2^24 + 1 is NOT representable in f32
+
+    def naive(b, _):
+        return b + inc, None
+
+    def kahan(carry, _):
+        return accumulate_bits(*carry, inc), None
+
+    steps = 10_000
+    stalled, _ = jax.lax.scan(lambda b, x: (b + inc, None), start,
+                              None, length=steps)
+    assert float(stalled) == 2.0 ** 24  # the seed bug: silently stuck
+
+    (bits, lo), _ = jax.lax.scan(
+        lambda c, x: (accumulate_bits(c[0], c[1], inc), None),
+        (start, jnp.float32(0.0)), None, length=steps)
+    total = float(bits) - float(lo)
+    assert abs(total - (2.0 ** 24 + steps)) <= 4.0, total
+
+
+def test_fedstate_bits_keep_incrementing_in_driver():
+    from repro.core.algorithms import ALGORITHMS, init_algorithm, make_epoch_fn
+    from repro.compression.ops import RandK
+    from repro.data.logreg import make_federated_logreg
+
+    prob = make_federated_logreg(m=4, n_batches=3, batch=4, d=8, cond=5.0,
+                                 seed=0)
+    spec, epoch = make_epoch_fn("q_rr", prob.loss_fn(), RandK(fraction=0.5),
+                                gamma=0.01)
+    st = init_algorithm(spec, {"w": jnp.zeros((prob.d,))}, prob.m, prob.n)
+    st = st._replace(bits=jnp.float32(2.0 ** 27))  # deep into stall territory
+    before = float(st.bits) - float(st.bits_lo)
+    ep = jax.jit(epoch)
+    for e in range(3):
+        st = ep(st, prob.data, jax.random.PRNGKey(e))
+    after = float(st.bits) - float(st.bits_lo)
+    # q_rr sends m * n * bits(RandK) per epoch; must all land despite the
+    # huge running total
+    from repro.compression.ops import tree_compression_bits
+    inc = 3 * prob.n * prob.m * tree_compression_bits(
+        RandK(fraction=0.5), {"w": jnp.zeros((prob.d,))})
+    assert abs((after - before) - inc) <= 8.0, (after - before, inc)
+
+
+# ---------------------------------------------------------------------------
+# satellite: theory stepsizes cover the beyond-paper EF method
+# ---------------------------------------------------------------------------
+
+def test_theoretical_stepsizes_ef_topk_rr():
+    from repro.core.algorithms import theoretical_stepsizes
+
+    out = theoretical_stepsizes("ef_topk_rr", l_max=10.0, mu=0.1, omega=9.0,
+                                m=8, n=4)
+    assert out["gamma"] == pytest.approx((1.0 / 10.0) / (2.0 * 10.0))
+    # every named algorithm now has a theory default
+    from repro.core.algorithms import ALGORITHMS
+    for name in ALGORITHMS:
+        got = theoretical_stepsizes(name, l_max=10.0, mu=0.1, omega=3.0,
+                                    m=8, n=4)
+        assert got["gamma"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: default-compressor condition (the dead branch is gone)
+# ---------------------------------------------------------------------------
+
+def test_make_epoch_fn_default_compressor():
+    from repro.compression.ops import Identity, RandK
+    from repro.core.algorithms import init_algorithm, make_epoch_fn
+
+    loss = lambda p, b: jnp.mean((p["w"] - b["x"]) ** 2)
+    data = {"x": jnp.ones((2, 2, 1))}
+    # no compressor -> identity, even for default-compressed methods
+    spec, epoch = make_epoch_fn("q_rr", loss, None, gamma=0.1)
+    st = init_algorithm(spec, {"w": jnp.zeros(())}, 2, 2)
+    st1 = jax.jit(epoch)(st, data, jax.random.PRNGKey(0))
+    spec2, epoch2 = make_epoch_fn("rr", loss, None, gamma=0.1)
+    st2 = jax.jit(epoch2)(init_algorithm(spec2, {"w": jnp.zeros(())}, 2, 2),
+                          data, jax.random.PRNGKey(0))
+    # identity-compressed q_rr IS rr
+    np.testing.assert_allclose(np.asarray(st1.params["w"]),
+                               np.asarray(st2.params["w"]), rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# shared-order sampler + the slot stream the per-slot wire consumes
+# ---------------------------------------------------------------------------
+
+def test_rr_shared_sampler_rows_agree():
+    from repro.data.reshuffle import ReshuffleSampler
+
+    s = ReshuffleSampler(5, 7, mode="rr_shared", seed=3)
+    for e in range(3):
+        order = s.epoch_order(e)
+        assert (order == order[:1]).all()
+        assert sorted(order[0].tolist()) == list(range(7))
+    assert not np.array_equal(s.epoch_order(0)[0], s.epoch_order(1)[0])
+
+
+def test_shared_slots_for_step_matches_stream_order():
+    from repro.data.pipeline import (make_batch_stream, shared_slots_for_step,
+                                     slots_for_step)
+    from repro.data.reshuffle import ReshuffleSampler
+
+    m, n, b, ls = 3, 4, 2, 2
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 100, size=(m, n, b, 5), dtype=np.int32)
+    sampler = ReshuffleSampler(m, n, mode="rr_shared", seed=9)
+    stream = make_batch_stream({"tokens": tokens}, sampler, local_steps=ls,
+                               prefetch=False)
+    with stream:
+        for t in range(2 * n // ls):  # two epochs, boundary included
+            batch = next(stream)
+            slots = shared_slots_for_step(sampler, t, ls)
+            want = np.concatenate(
+                [tokens[c, slots[j]] for c in range(m) for j in range(ls)], 0)
+            np.testing.assert_array_equal(batch["tokens"], want)
+    # per-client helper agrees with the shared view
+    np.testing.assert_array_equal(
+        slots_for_step(sampler, 1, ls)[0], shared_slots_for_step(sampler, 1, ls))
+
+
+def test_shared_slots_rejects_divergent_orders():
+    from repro.data.pipeline import shared_slots_for_step
+    from repro.data.reshuffle import ReshuffleSampler
+
+    with pytest.raises(ValueError, match="shared order"):
+        shared_slots_for_step(ReshuffleSampler(4, 6, mode="rr", seed=0), 0, 2)
+
+
+def test_shared_slots_rejects_undersized_table():
+    from repro.data.pipeline import shared_slots_for_step
+    from repro.data.reshuffle import ReshuffleSampler
+
+    s = ReshuffleSampler(4, 6, mode="rr_shared", seed=0)
+    with pytest.raises(ValueError, match="n_slots"):
+        shared_slots_for_step(s, 0, 2, n_slots=4)  # table smaller than n
+    assert shared_slots_for_step(s, 0, 2, n_slots=6).shape == (2,)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 forced host devices")
+def test_diana_rr_default_n_slots_state_places():
+    """Regression: diana_rr with the default n_slots=1 — the slot axis is
+    present on the tables (size 1), and the sharding specs must carry the
+    matching replicated entry instead of pushing TP onto the slot dim."""
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.core.dist import CompressedAggregation
+    from repro.launch import steps
+    from repro.launch.mesh import make_test_mesh, num_clients
+
+    cfg = reduced(get_config("stablelm-1.6b"), seq=8)
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    m = num_clients(mesh)
+    agg = CompressedAggregation(method="diana_rr", wire="shared",
+                                fraction=0.5, shift_dtype=jnp.float32)
+    state = steps.init_train_state(jax.random.key(0), cfg, agg, m, mesh=mesh)
+    shardings = steps.train_state_shardings(
+        mesh, state, steps.configure_agg(agg, mesh))
+    placed = jax.device_put(state, shardings)  # crashed before the fix
+    assert jax.tree.leaves(placed.shifts)[0].shape[:2] == (m, 1)
