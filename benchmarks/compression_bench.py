@@ -428,6 +428,88 @@ def run_pipeline_bench(*, quick: bool, reps: int):
     return out
 
 
+def run_fleet_bench(*, quick: bool, reps: int):
+    """Fleet layer: gather/scatter overhead vs resident shifts.
+
+    A fleet round (repro.fleet, DESIGN.md §3.9) pays a host round-trip the
+    resident wire does not: gather the cohort's shift rows from the sharded
+    `ClientStateStore`, device_put, run the round's fused shift update,
+    device_get, scatter back. This times that full round-trip per cohort at
+    population scales C ∈ {1e3, 1e5} against the resident baseline (just
+    the device update) — the claim under test is that the overhead scales
+    with the COHORT (fixed here), not the population: the two C rows should
+    cost the same. The 1e5-client store is memmap-backed, so the benchmark
+    also exercises the mmap path without 1e5 × d of RSS.
+    """
+    import tempfile
+
+    from repro.core.rules import get_rule
+    from repro.fleet import ClientStateStore, CohortSampler
+
+    m = 8
+    d = 4_096 if quick else 32_768
+    rounds = 20 if quick else 50
+    params = {"w": np.zeros((d,), np.float32)}
+    rule = get_rule("single")
+    alpha = 0.25
+    q = jnp.ones((m, d), jnp.float32)
+    update = jax.jit(lambda h: h + alpha * q)
+
+    print(f"\n--- fleet: cohort {m} x d={d:,}, store gather/scatter "
+          + "-" * 22)
+    out = {"cohort": m, "d": d}
+
+    # resident baseline: the same device update, shifts never leave HBM
+    h = update(jnp.zeros((m, d), jnp.float32))
+    jax.block_until_ready(h)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            h = update(h)
+        jax.block_until_ready(h)
+        times.append((time.perf_counter() - t0) / rounds)
+    resident_s = float(np.median(times))
+    print(f"shift  resident   {fmt(resident_s)}")
+    out["resident_s"] = resident_s
+
+    for pop in (1_000, 100_000):
+        with tempfile.TemporaryDirectory() as tmp:
+            store = ClientStateStore.create(
+                params, pop, rule, dtype=np.float32,
+                shard_size=16_384, path=tmp if pop > 10_000 else None)
+            cohorts = CohortSampler(pop, m, seed=0)
+
+            def fleet_round(t):
+                cohort = cohorts.cohort_for_round(t)
+                hd = jax.device_put(store.gather(cohort))
+                hd = {"w": update(hd["w"])}
+                store.scatter(cohort, jax.device_get(hd))
+
+            fleet_round(0)  # warm (compile + touch store pages)
+            times = []
+            for r in range(reps):
+                t0 = time.perf_counter()
+                for t in range(rounds):
+                    fleet_round(1 + r * rounds + t)
+                times.append((time.perf_counter() - t0) / rounds)
+            sec = float(np.median(times))
+            label = f"C=1e{int(math.log10(pop))}"
+            over = sec / resident_s
+            print(f"fleet  {label:10s} {fmt(sec)}   ({over:5.1f}x resident, "
+                  f"store {store.num_shards} shards"
+                  f"{', mmap' if store.path else ''})")
+            out[label] = {"round_s": sec, "overhead_x_vs_resident": over,
+                          "population": pop, "mmap": store.path is not None}
+    # O(cohort) claim: the two population rows should cost about the same —
+    # the residual gap is the 1e5 store's mmap first-touch page faults and
+    # its cohort spreading over more shards, not population-linear work
+    out["pop_scaling_x"] = out["C=1e5"]["round_s"] / out["C=1e3"]["round_s"]
+    print(f"fleet  1e5/1e3 round-time ratio {out['pop_scaling_x']:5.2f}x "
+          "(O(cohort) gather/scatter: ~1x + mmap first-touch)")
+    return out
+
+
 def check_baseline(results: dict, baseline_path: str) -> bool:
     """CI guard: fail when the pallas-vs-reference (and pallas-vs-seed)
     Rand-k speedups regress below the committed BENCH_compression.json.
@@ -504,6 +586,9 @@ def main() -> None:
 
     results["pipeline"] = run_pipeline_bench(quick=args.quick,
                                              reps=max(3, reps // 2))
+
+    results["fleet"] = run_fleet_bench(quick=args.quick,
+                                       reps=max(3, reps // 2))
 
     sp = results["scales"]["logreg"]["randk_speedup_pallas_vs_seed"]
     results["meta"]["elapsed_s"] = round(time.time() - t0, 1)

@@ -22,6 +22,8 @@ import numpy as np
 from repro.compression.ops import RandK
 from repro.core.algorithms import ALGORITHMS, init_algorithm, make_epoch_fn, theoretical_stepsizes
 from repro.data.logreg import make_federated_logreg
+from repro.data.pipeline import run_epochs
+from repro.data.reshuffle import ReshuffleSampler
 
 
 def _problem(cond: float = 1e3, seed: int = 0):
@@ -29,6 +31,15 @@ def _problem(cond: float = 1e3, seed: int = 0):
         m=20, n_batches=10, batch=10, d=100, cond=cond, seed=seed,
         heterogeneous=True,
     )
+
+
+def _sampler_mode(name: str) -> str:
+    """The paper's order source per method: Shuffle-Once for DIANA-RR (slot
+    i always maps to the same datapoint), fresh per-epoch RR for the other
+    reshuffling methods, with-replacement for the rest."""
+    if name == "diana_rr":
+        return "rr_once"
+    return ALGORITHMS[name].sampling  # 'rr' | 'wr'
 
 
 def _run(problem, name, comp, epochs, mult, seed=0, track_every=0):
@@ -43,15 +54,21 @@ def _run(problem, name, comp, epochs, mult, seed=0, track_every=0):
     alpha = th.get("alpha")
     spec, epoch = make_epoch_fn(name, loss, comp, gamma=gamma, eta=eta, alpha=alpha)
     st = init_algorithm(spec, {"w": jnp.zeros((problem.d,))}, problem.m, problem.n)
-    ep = jax.jit(epoch)
-    key = jax.random.PRNGKey(seed)
+    # epoch order from the SAME stateless epoch-indexed sampler the
+    # production stream consumes (pipeline.run_epochs / DESIGN.md §3.7) —
+    # paper-table runs and the pod wire share one order source
+    sampler = ReshuffleSampler(problem.m, problem.n, mode=_sampler_mode(name),
+                               seed=seed)
     trace = []
-    t0 = time.perf_counter()
-    for e in range(epochs):
-        key, k = jax.random.split(key)
-        st = ep(st, problem.data, k)
+
+    def track(e, st_e):
         if track_every and (e + 1) % track_every == 0:
-            trace.append((e + 1, float(st.bits), problem.suboptimality(st.params["w"])))
+            trace.append((e + 1, float(st_e.bits),
+                          problem.suboptimality(st_e.params["w"])))
+
+    t0 = time.perf_counter()
+    st = run_epochs(epoch, st, problem.data, sampler, epochs=epochs,
+                    key=jax.random.PRNGKey(seed), callback=track)
     jax.block_until_ready(st.params["w"])
     dt = (time.perf_counter() - t0) / epochs
     sub = problem.suboptimality(st.params["w"])

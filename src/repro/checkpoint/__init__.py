@@ -1,8 +1,11 @@
 from repro.checkpoint.io import (
     load_meta,
     load_pytree,
+    restore_fleet_checkpoint,
     restore_train_state,
+    save_fleet_checkpoint,
     save_pytree,
 )
 
-__all__ = ["save_pytree", "load_pytree", "load_meta", "restore_train_state"]
+__all__ = ["save_pytree", "load_pytree", "load_meta", "restore_train_state",
+           "save_fleet_checkpoint", "restore_fleet_checkpoint"]

@@ -77,8 +77,12 @@ def load_meta(path: str) -> dict:
     raise KeyError(f"{path}: no manifest entry — not a repro checkpoint")
 
 
-def load_pytree(path: str, like: Any) -> Any:
-    """Restore into the structure (and dtypes) of `like` (abstract ok)."""
+def load_pytree(path: str, like: Any, *, device: bool = True) -> Any:
+    """Restore into the structure (and dtypes) of `like` (abstract ok).
+
+    device=False keeps every leaf a host numpy array — required when part
+    of the tree is population-sized host state (the fleet client-state
+    store) that must never be materialized on device."""
     import jax.numpy as jnp
     import ml_dtypes
 
@@ -102,7 +106,10 @@ def load_pytree(path: str, like: Any) -> Any:
         arr = by_path[p]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{p}: shape {arr.shape} != expected {leaf.shape}")
-        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+        if device:
+            out.append(jnp.asarray(arr, dtype=leaf.dtype))
+        else:
+            out.append(arr.astype(np.dtype(leaf.dtype), copy=False))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -110,3 +117,33 @@ def restore_train_state(path: str, abstract_state: Any, shardings: Any) -> Any:
     """Load + device_put onto the target sharding tree (cross-mesh restore)."""
     host = load_pytree(path, abstract_state)
     return jax.device_put(host, shardings)
+
+
+# ---------------------------------------------------------------------------
+# fleet checkpoints: device TrainState + host client-state store in ONE file
+# ---------------------------------------------------------------------------
+
+def save_fleet_checkpoint(path: str, state: Any, store, *,
+                          step: int | None = None,
+                          meta: dict | None = None) -> None:
+    """One atomic checkpoint of a fleet run: the (host-fetched) TrainState,
+    the population store (`ClientStateStore.as_tree()` — per-shard arrays,
+    no concatenation), and the fleet cursor/sampler specs in the manifest
+    meta (`FleetRunner.checkpoint_meta()` under the 'fleet' key) so
+    `--resume` can validate + rebuild the walk before touching buffers."""
+    meta = dict(meta or {})
+    meta.setdefault("store_spec", store.spec())
+    save_pytree(path, {"state": state, "store": store.as_tree()},
+                step=step, meta=meta)
+
+
+def restore_fleet_checkpoint(path: str, abstract_state: Any, shardings: Any,
+                             store) -> Any:
+    """Restore a `save_fleet_checkpoint` file: the TrainState goes onto the
+    target shardings, the store (built fresh by the caller with the run's
+    own layout) is filled IN PLACE from host memory — population-sized
+    buffers never touch a device. Returns the device TrainState."""
+    tree = load_pytree(path, {"state": abstract_state,
+                              "store": store.as_tree()}, device=False)
+    store.load_tree(tree["store"])
+    return jax.device_put(tree["state"], shardings)

@@ -9,6 +9,8 @@ from repro.core.algorithms import (
     AlgoSpec,
     init_algorithm,
     make_epoch_fn,
+    make_round_fn,
+    run_fleet_rounds,
     theoretical_stepsizes,
 )
 from repro.core.dist import CompressedAggregation, DianaState
@@ -21,6 +23,8 @@ __all__ = [
     "AlgoSpec",
     "init_algorithm",
     "make_epoch_fn",
+    "make_round_fn",
+    "run_fleet_rounds",
     "theoretical_stepsizes",
     "CompressedAggregation",
     "DianaState",

@@ -113,6 +113,43 @@ def _sample_round_indices(spec: AlgoSpec, key, m: int, n: int) -> jax.Array:
 # non-local family: one compressed aggregation per iteration
 # ---------------------------------------------------------------------------
 
+def _make_round(rule, loss_fn: LossFn, comp, gamma: float, alpha: float,
+                backend: CompressionBackend):
+    """One non-local communication round on a client-stacked slice.
+
+    round(params, shifts, data, col, key) -> (params, shifts): `data` leaves
+    are (M, n, ...), `col` the (M,) batch index per client. This is the body
+    `_nonlocal_epoch` scans over an epoch's order matrix — and, unchanged,
+    what `run_fleet_rounds` applies to a cohort-gathered slice of a larger
+    population (the fleet bit-match obligation, DESIGN.md §3.9).
+    """
+
+    def round_fn(params, shifts, data, col, key):
+        m = num_clients(data)
+        arange_m = jnp.arange(m)
+        batches = round_batches(data, col)
+        g = clients_grad(loss_fn, params, batches)  # leaves (M, ...)
+
+        # one rule call-chain replaces the per-method ladders: select the
+        # round's memory (per-slot tables index by (client, batch)), build
+        # the compressed payload, run every client through ONE backend
+        # launch (independent randomness per client — the paper's 1/M
+        # variance factor), apply the rule's fused update, write back.
+        h = rule.select(shifts, (arange_m, col))
+        p = rule.payload(g, h, gamma=gamma)
+        q = backend.compress_clients(comp, key, p)
+        ghat, h_new, _ = rule.update(h, q, h, q, alpha=alpha, gamma=gamma,
+                                     backend=backend, payload=p)
+        new_shifts = rule.scatter(shifts, (arange_m, col), h_new)
+
+        direction = tree_mean_clients(ghat)
+        new_params = jax.tree.map(lambda p, d: p - gamma * d, params,
+                                  direction)
+        return new_params, new_shifts
+
+    return round_fn
+
+
 def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
                     alpha: float, backend: CompressionBackend,
                     state: FedState, data, key, order=None) -> FedState:
@@ -124,29 +161,12 @@ def _nonlocal_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float,
     idx = order if order is not None else \
         _sample_round_indices(spec, k_idx, m, n)  # (M, n)
     step_keys = jax.random.split(k_comp, n)
-    arange_m = jnp.arange(m)
+    round_fn = _make_round(rule, loss_fn, comp, gamma, alpha, backend)
 
     def step(carry, inp):
         params, shifts = carry
         col, k = inp  # col: (M,) batch index per client
-        batches = round_batches(data, col)
-        g = clients_grad(loss_fn, params, batches)  # leaves (M, ...)
-
-        # one rule call-chain replaces the per-method ladders: select the
-        # round's memory (per-slot tables index by (client, batch)), build
-        # the compressed payload, run every client through ONE backend
-        # launch (independent randomness per client — the paper's 1/M
-        # variance factor), apply the rule's fused update, write back.
-        h = rule.select(shifts, (arange_m, col))
-        p = rule.payload(g, h, gamma=gamma)
-        q = backend.compress_clients(comp, k, p)
-        ghat, h_new, _ = rule.update(h, q, h, q, alpha=alpha, gamma=gamma,
-                                     backend=backend, payload=p)
-        new_shifts = rule.scatter(shifts, (arange_m, col), h_new)
-
-        direction = tree_mean_clients(ghat)
-        new_params = jax.tree.map(lambda p, d: p - gamma * d, params, direction)
-        return (new_params, new_shifts), None
+        return round_fn(params, shifts, data, col, k), None
 
     (params, shifts), _ = jax.lax.scan(
         step, (state.params, state.shifts), (idx.T, step_keys)
@@ -224,6 +244,22 @@ def _local_epoch(spec: AlgoSpec, loss_fn: LossFn, comp, gamma: float, eta: float
 # public factory
 # ---------------------------------------------------------------------------
 
+def _resolve_comp_alpha(compressor, alpha):
+    # no compressor given -> identity (the old condition's second arm,
+    # `not spec.default_compressed and compressor is None`, was dead code:
+    # operator precedence made it reachable only when `comp is None` had
+    # already short-circuited the `or`)
+    comp = Identity() if compressor is None else compressor
+    if alpha is None:
+        # Theorems 2/4: alpha <= 1/(1+omega); identity => alpha=1
+        try:
+            om = max(comp.omega(1024), 0.0)
+        except Exception:
+            om = 0.0
+        alpha = 1.0 / (1.0 + (0.0 if om != om else om))  # NaN-safe (TopK)
+    return comp, alpha
+
+
 def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
                   eta: float | None = None, alpha: float | None = None,
                   backend: str | CompressionBackend | None = None):
@@ -242,18 +278,7 @@ def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
     """
     spec = ALGORITHMS[name]
     be = get_backend(backend)
-    # no compressor given -> identity (the old condition's second arm,
-    # `not spec.default_compressed and compressor is None`, was dead code:
-    # operator precedence made it reachable only when `comp is None` had
-    # already short-circuited the `or`)
-    comp = Identity() if compressor is None else compressor
-    if alpha is None:
-        # Theorems 2/4: alpha <= 1/(1+omega); identity => alpha=1
-        try:
-            om = max(comp.omega(1024), 0.0)
-        except Exception:
-            om = 0.0
-        alpha = 1.0 / (1.0 + (0.0 if om != om else om))  # NaN-safe (TopK)
+    comp, alpha = _resolve_comp_alpha(compressor, alpha)
     if eta is None:
         eta = gamma  # caller should set for server-stepsize methods
 
@@ -267,6 +292,86 @@ def make_epoch_fn(name: str, loss_fn: LossFn, compressor=None, *, gamma: float,
                                 state, data, key, order)
 
     return spec, epoch
+
+
+def make_round_fn(name: str, loss_fn: LossFn, compressor=None, *,
+                  gamma: float, alpha: float | None = None,
+                  backend: str | CompressionBackend | None = None):
+    """Return (spec, round_fn) for non-local algorithm `name`.
+
+    round_fn(params, shifts, data, col, key) -> (params, shifts) is ONE
+    communication round on a client-stacked slice (`data` leaves (M, n,
+    ...), `col` the (M,) batch index per client) — the exact body
+    `_nonlocal_epoch` scans over an epoch, exposed so partial-participation
+    drivers (`run_fleet_rounds`) can apply it to cohort-gathered slices of
+    a larger population. Local-family methods have no per-round form (they
+    communicate once per epoch) and raise.
+    """
+    spec = ALGORITHMS[name]
+    if spec.family != "nonlocal":
+        raise ValueError(
+            f"{name!r} is a local-family method — it communicates one epoch "
+            "gradient, not per-round messages; there is no round function")
+    be = get_backend(backend)
+    comp, alpha = _resolve_comp_alpha(compressor, alpha)
+    rule = get_rule(spec.shift_mode)
+    return spec, _make_round(rule, loss_fn, comp, gamma, alpha, be)
+
+
+def run_fleet_rounds(name: str, loss_fn: LossFn, compressor=None, *,
+                     gamma: float, alpha: float | None = None,
+                     backend: str | CompressionBackend | None = None,
+                     params, data, sampler, store, cohort_sampler,
+                     rounds: int, key, start_round: int = 0,
+                     jit: bool = True):
+    """Simulator fleet driver: partial participation at population scale.
+
+    Each round t samples a cohort of client ids (`repro.fleet.
+    CohortSampler`, sorted — the canonical mesh-rank order), gathers the
+    cohort's rows of the population `data` (leaves (C, n, ...)) and its
+    persistent shifts from the host `store` (`repro.fleet.
+    ClientStateStore`), runs ONE paper round — the same `_make_round` body
+    `_nonlocal_epoch` scans — on the gathered slice, and scatters the
+    updated shifts back. Batch indices come from each client's OWN data
+    cursor (the store's per-client micro-step counter: clients advance only
+    when sampled) through the stateless `sampler`, so the walk is resumable
+    from `(store, start_round)` alone.
+
+    With cohort == population under cohort-RR every round is exactly one
+    `_nonlocal_epoch` scan step — the cross-check that pins the production
+    fleet path's semantics (DESIGN.md §3.9; tests/test_fleet.py). The
+    store is updated in place; returns (params, info) with round/bit
+    totals.
+    """
+    from repro.data.pipeline import ClientOrderWalk  # deferred: data -> core
+
+    comp, alpha = _resolve_comp_alpha(compressor, alpha)
+    _, round_fn = make_round_fn(name, loss_fn, comp, gamma=gamma,
+                                alpha=alpha, backend=backend)
+    if store.population != cohort_sampler.population or \
+            store.population != sampler.m:
+        raise ValueError(
+            f"population mismatch: store {store.population}, cohort sampler "
+            f"{cohort_sampler.population}, data sampler {sampler.m}")
+    step = jax.jit(round_fn) if jit else round_fn
+    walk = ClientOrderWalk(sampler)  # the same cursor walk CohortStream runs
+
+    bits_per_client = float(tree_compression_bits(comp, params))
+    for t in range(start_round, start_round + rounds):
+        cohort = cohort_sampler.cohort_for_round(t)
+        col = walk.cols_at(cohort, store.cursors(cohort))[:, 0]
+        data_slice = jax.tree.map(lambda l: l[cohort], data)
+        shifts = store.gather(cohort)
+        params, new_shifts = step(params, shifts, data_slice,
+                                  jnp.asarray(col),
+                                  jax.random.fold_in(key, t))
+        if store.has_shifts:
+            store.scatter(cohort, jax.device_get(new_shifts))
+        store.advance(cohort, 1)
+        store.add_bits(cohort, bits_per_client)
+    info = {"rounds": rounds,
+            "bits": rounds * cohort_sampler.cohort_size * bits_per_client}
+    return params, info
 
 
 def theoretical_stepsizes(name: str, *, l_max: float, mu: float, omega: float,

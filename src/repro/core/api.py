@@ -21,6 +21,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Params = Any
 Batch = Any
@@ -52,7 +53,11 @@ class FedState(NamedTuple):
     server_h: Any
     rounds: jax.Array
     bits: jax.Array
-    bits_lo: jax.Array = 0.0
+    # np.float32 (not a Python float): a weak-typed 0.0 default would
+    # promote hand-built states under tree maps against init_state's f32
+    # scalar (np is used so importing this module never initializes jax
+    # device state — the dry-run contract, DESIGN.md §6)
+    bits_lo: jax.Array = np.float32(0.0)
 
 
 def init_state(params: Params, shifts: Any = None, server_h: Any = None) -> FedState:

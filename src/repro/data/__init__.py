@@ -5,7 +5,9 @@ from repro.data.logreg import (
 )
 from repro.data.pipeline import (
     BatchStream,
+    CohortStream,
     EpochIterator,
+    FleetRound,
     abstract_stream_batch,
     make_batch_stream,
     normalize_client_data,
@@ -16,7 +18,9 @@ from repro.data.tokens import synthetic_token_batches
 
 __all__ = [
     "BatchStream",
+    "CohortStream",
     "EpochIterator",
+    "FleetRound",
     "LogRegProblem",
     "ReshuffleSampler",
     "abstract_stream_batch",

@@ -25,7 +25,7 @@ small simulator/dry-run helpers at the bottom.
 from __future__ import annotations
 
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, NamedTuple
 
 import numpy as np
 
@@ -145,20 +145,87 @@ class EpochIterator:
 # the stream
 # ---------------------------------------------------------------------------
 
-class BatchStream:
+class _PrefetchStream:
+    """Shared double-buffered prefetch lifecycle for the batch streams.
+
+    Subclasses implement `_plan()` (calling thread ONLY — it advances the
+    stream's cursor, so worker timing can never reorder the walk),
+    `_build(plan)` (worker thread: assembly + `put` — device transfer
+    overlaps the running step), and `_emit(plan, built)` (calling thread:
+    bookkeeping + the yielded value). With `prefetch=True` exactly one
+    built batch is kept in flight. A failed plan/build POISONS the stream
+    — the cursor no longer matches the batches actually delivered, and a
+    caught-and-retried next() must not silently skip a batch.
+    """
+
+    def __init__(self, prefetch: bool):
+        self._pool = ThreadPoolExecutor(max_workers=1) if prefetch else None
+        self._pending = None
+        self._closed = False
+
+    # -- subclass hooks ----------------------------------------------------
+
+    def _plan(self):
+        raise NotImplementedError
+
+    def _build(self, plan):
+        raise NotImplementedError
+
+    def _emit(self, plan, built):
+        raise NotImplementedError
+
+    # -- iteration ---------------------------------------------------------
+
+    def _submit(self):
+        plan = self._plan()
+        fut = (self._pool.submit(self._build, plan)
+               if self._pool is not None else None)
+        return plan, fut
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise ValueError(
+                f"{type(self).__name__} is closed (or died on a failed "
+                "assemble/put) — its cursor no longer matches the emitted "
+                "batches; rebuild the stream from the last checkpointed "
+                "cursor")
+        try:
+            if self._pool is None:
+                plan, _ = self._submit()
+                return self._emit(plan, self._build(plan))
+            if self._pending is None:
+                self._pending = self._submit()
+            (plan, fut), self._pending = self._pending, self._submit()
+            return self._emit(plan, fut.result())
+        except BaseException:
+            self.close()
+            raise
+
+    def close(self):
+        self._closed = True
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+            self._pending = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class BatchStream(_PrefetchStream):
     """Iterator of client-major `(m * local_steps * b)`-row train batches.
 
     Each `next()` yields one train step's feed: for every client c, its
     `local_steps` next RR micro-batches (in order), stacked client-major —
     rows `[c*ls*b, (c+1)*ls*b)` belong to client c. All leaves are gathered
-    with the same index stream, so multi-modal rows stay aligned.
-
-    With `prefetch=True` (double buffering) the stream keeps exactly one
-    assembled batch in flight: `next()` returns the ready batch and hands
-    the following one to a worker thread (assembly + `put`), overlapping
-    host work and device transfer with the running step. Index columns are
-    always drawn on the calling thread, so the stream's order — and its
-    cursor — never depends on worker timing.
+    with the same index stream, so multi-modal rows stay aligned. Prefetch
+    and poisoning semantics come from `_PrefetchStream`.
     """
 
     def __init__(self, data: Mapping[str, Any], sampler: ReshuffleSampler, *,
@@ -180,9 +247,7 @@ class BatchStream:
         self._start_step = int(start_step)
         self._consumed = 0  # train steps handed to the caller
         self._it = EpochIterator(sampler, start=start_step * local_steps)
-        self._pool = ThreadPoolExecutor(max_workers=1) if prefetch else None
-        self._pending = None
-        self._closed = False
+        super().__init__(prefetch)
 
     # -- cursor / checkpointing --------------------------------------------
 
@@ -209,68 +274,32 @@ class BatchStream:
                 "local_steps": self.local_steps,
                 "sampler": self._it.sampler.spec()}
 
-    # -- assembly ----------------------------------------------------------
+    # -- _PrefetchStream hooks ---------------------------------------------
 
-    def _assemble(self, cols: np.ndarray) -> dict:
-        """cols: (M, local_steps) batch indices -> client-major batch."""
-        ls = cols.shape[1]
-        out = {}
-        for name, views in self._views.items():
-            rows = [views[c][cols[c, j]]
-                    for c in range(self.m) for j in range(ls)]
-            out[name] = np.concatenate(rows, axis=0)
-        return out
+    def _plan(self) -> np.ndarray:
+        return self._it.take(self.local_steps)
 
-    def _assemble_put(self, cols: np.ndarray):
-        batch = self._assemble(cols)
-        return self._put(batch) if self._put is not None else batch
+    def _build(self, cols: np.ndarray):
+        return _assemble_rows(self._views, range(self.m), cols, self._put)
 
-    def _submit(self):
-        cols = self._it.take(self.local_steps)  # calling thread: order fixed
-        if self._pool is None:
-            return cols
-        return self._pool.submit(self._assemble_put, cols)
-
-    # -- iteration ---------------------------------------------------------
-
-    def __iter__(self):
-        return self
-
-    def __next__(self):
-        if self._closed:
-            raise ValueError(
-                "BatchStream is closed (or died on a failed assemble/put) — "
-                "its cursor no longer matches the emitted batches; rebuild "
-                "the stream from the last checkpointed cursor")
-        try:
-            if self._pool is None:
-                out = self._assemble_put(self._submit())
-            else:
-                if self._pending is None:
-                    self._pending = self._submit()
-                ready, self._pending = self._pending, self._submit()
-                out = ready.result()
-        except BaseException:
-            # a failed assemble/put desyncs the iterator from the batches
-            # actually delivered: poison the stream rather than let a
-            # caught-and-retried next() silently skip a batch
-            self.close()
-            raise
+    def _emit(self, cols: np.ndarray, built):
         self._consumed += 1
-        return out
+        return built
 
-    def close(self):
-        self._closed = True
-        if self._pool is not None:
-            self._pool.shutdown(wait=False, cancel_futures=True)
-            self._pool = None
-            self._pending = None
 
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
+def _assemble_rows(views: dict, clients, cols: np.ndarray,
+                   put: PutFn | None):
+    """Client-major row assembly — THE row contract, shared by the
+    full-participation and per-cohort streams: for the i-th client in
+    `clients`, its `cols[i, :]` batches in order, every leaf gathered by
+    the same index stream (modalities stay row-aligned), then `put`."""
+    ls = cols.shape[1]
+    out = {}
+    for name, v in views.items():
+        rows = [v[c][cols[i, j]]
+                for i, c in enumerate(clients) for j in range(ls)]
+        out[name] = np.concatenate(rows, axis=0)
+    return put(out) if put is not None else out
 
 
 def make_batch_stream(data: Mapping[str, Any], sampler: ReshuffleSampler, *,
@@ -305,6 +334,157 @@ def make_batch_stream(data: Mapping[str, Any], sampler: ReshuffleSampler, *,
 
 
 # ---------------------------------------------------------------------------
+# the per-cohort stream view (fleet partial participation, DESIGN.md §3.9)
+# ---------------------------------------------------------------------------
+
+class ClientOrderWalk:
+    """Memoized per-client (cursor -> batch index) lookup over a stateless
+    `ReshuffleSampler` — the ONE copy of the divmod-into-epoch-order walk
+    that both the per-cohort stream and the simulator fleet driver
+    (`core.algorithms.run_fleet_rounds`) consume. Memoization is pure
+    caching; the lookup stays a pure function of `(sampler, client,
+    cursor)`."""
+
+    def __init__(self, sampler: ReshuffleSampler, *, cache: int = 8):
+        self.sampler = sampler
+        self._cache = int(cache)
+        self._orders: dict[int, np.ndarray] = {}
+
+    def order_for(self, epoch: int) -> np.ndarray:
+        order = self._orders.get(epoch)
+        if order is None:
+            order = self.sampler.epoch_order(epoch)
+            self._orders[epoch] = order
+            while len(self._orders) > self._cache:
+                self._orders.pop(next(iter(self._orders)))
+        return order
+
+    def cols_at(self, clients: np.ndarray, counts: np.ndarray,
+                local_steps: int = 1) -> np.ndarray:
+        """(len(clients), local_steps) batch indices: client i's next
+        `local_steps` RR positions starting at ITS OWN micro-step cursor
+        `counts[i]` — per-client data-epoch boundaries included (each
+        client draws from its own epoch's permutation)."""
+        n = self.sampler.n
+        cols = np.empty((clients.size, local_steps), np.int32)
+        for j in range(local_steps):
+            epochs, i = np.divmod(counts + j, n)
+            for e in np.unique(epochs):
+                sel = epochs == e
+                cols[sel, j] = self.order_for(int(e))[clients[sel], i[sel]]
+        return cols
+
+
+class FleetRound(NamedTuple):
+    """One round's feed from a `CohortStream`.
+
+    cohort: (m,) sorted client ids participating this round;
+    cols:   (m, local_steps) per-client batch indices consumed — client i's
+            next RR micro-batches at ITS OWN data cursor (clients advance
+            only when sampled, so cursors diverge under partial
+            participation);
+    batch:  the assembled (and `put`-applied) client-major
+            `(m * local_steps * b)`-row batch, same row contract as
+            `BatchStream`.
+    """
+
+    round: int
+    cohort: np.ndarray
+    cols: np.ndarray
+    batch: Any
+
+
+class CohortStream(_PrefetchStream):
+    """Per-cohort view of a population-sized client-stacked dataset.
+
+    The full-participation `BatchStream` walks every client in lockstep; a
+    fleet run (`repro.fleet`) samples a cohort of `cohort_size` clients from
+    a population of C each round and must assemble rows for the sampled
+    clients ONLY, each at its own RR position. This stream owns that:
+
+      - per-client micro-step cursors, advanced only on participation —
+        derived in closed form from the stateless `CohortSampler`
+        (`participation_counts`), so the stream is a pure function of
+        `(data, data_sampler, cohort_sampler, start_round)` and resumes
+        bit-exactly from a round index;
+      - per-client epoch boundaries via `ClientOrderWalk` (each sampled
+        client draws from its own data epoch's permutation);
+      - the same client-major assembly and modality alignment as
+        `BatchStream`, with the `_PrefetchStream` double-buffer/poisoning
+        lifecycle (cohort planning always happens on the calling thread,
+        so worker timing never reorders the walk).
+
+    With `cohort == population` under cohort-RR every round samples every
+    client in ascending order and the emitted batches are exactly
+    `BatchStream`'s — the fleet bit-match invariant (DESIGN.md §3.9).
+    """
+
+    def __init__(self, data: Mapping[str, Any], sampler: ReshuffleSampler,
+                 cohort_sampler, *, local_steps: int = 1,
+                 put: PutFn | None = None, prefetch: bool = True,
+                 drop_remainder: bool = True, start_round: int = 0):
+        if local_steps < 1:
+            raise ValueError(f"local_steps={local_steps}")
+        if sampler.m != cohort_sampler.population:
+            raise ValueError(
+                f"data sampler covers {sampler.m} clients but the cohort "
+                f"sampler draws from a population of "
+                f"{cohort_sampler.population}")
+        self._views, n_avail = normalize_client_data(
+            data, sampler.m, drop_remainder=drop_remainder)
+        if sampler.n > n_avail:
+            raise ValueError(
+                f"sampler indexes {sampler.n} batches/client but the data "
+                f"holds only {n_avail} usable batches/client")
+        self.sampler = sampler
+        self.cohorts = cohort_sampler
+        self.local_steps = int(local_steps)
+        self._put = put
+        self._round = int(start_round)
+        # per-client micro-step cursors: closed-form replay of the cohort
+        # walk, so a resumed stream needs no checkpointed sampler state
+        self.counts = (cohort_sampler.participation_counts(start_round)
+                       * self.local_steps)
+        self._walk = ClientOrderWalk(sampler)
+        super().__init__(prefetch)
+
+    # -- cursor / checkpointing --------------------------------------------
+
+    @property
+    def round(self) -> int:
+        """Next UNCONSUMED round (prefetched batches don't count)."""
+        return self._round - (0 if self._pending is None else 1)
+
+    def cursor_meta(self) -> dict:
+        """JSON-serializable fleet cursor + sampler specs for the
+        checkpoint manifest; resume with `start_round=meta['round']`."""
+        fleet_epoch, pos = self.cohorts.cursor(self.round)
+        return {"round": self.round, "fleet_epoch": fleet_epoch,
+                "epoch_position": pos, "local_steps": self.local_steps,
+                "cohort_sampler": self.cohorts.spec(),
+                "sampler": self.sampler.spec()}
+
+    # -- _PrefetchStream hooks ---------------------------------------------
+
+    def _plan(self) -> tuple[int, np.ndarray, np.ndarray]:
+        t = self._round
+        cohort = self.cohorts.cohort_for_round(t)
+        cols = self._walk.cols_at(cohort, self.counts[cohort],
+                                  self.local_steps)
+        self.counts[cohort] += self.local_steps
+        self._round = t + 1
+        return t, cohort, cols
+
+    def _build(self, plan):
+        _, cohort, cols = plan
+        return _assemble_rows(self._views, cohort, cols, self._put)
+
+    def _emit(self, plan, built) -> FleetRound:
+        t, cohort, cols = plan
+        return FleetRound(t, cohort, cols, built)
+
+
+# ---------------------------------------------------------------------------
 # slot streams (production DIANA-RR: which shift slot each round touches)
 # ---------------------------------------------------------------------------
 
@@ -319,16 +499,20 @@ def slots_for_step(sampler: ReshuffleSampler, step: int,
     return EpochIterator(sampler, start=step * local_steps).take(local_steps)
 
 
-def shared_slots_for_step(sampler: ReshuffleSampler, step: int,
-                          local_steps: int = 1, *,
-                          n_slots: int | None = None) -> np.ndarray:
-    """(local_steps,) SHARED slot indices for train step `step`.
+def shared_slots_at(sampler: ReshuffleSampler, micro_step: int,
+                    count: int = 1, *,
+                    n_slots: int | None = None) -> np.ndarray:
+    """(count,) SHARED slot indices starting at per-client micro-step
+    `micro_step`.
 
     The production per-slot wire needs every client of a wire level on the
     same slot per round (DESIGN.md §3.8); that requires a sampler whose
     epoch orders agree across clients (`mode='rr_shared'`, or trivially
     m == 1). Raises when the clients' orders diverge rather than silently
-    de-aligning shift slots from the batches actually consumed.
+    de-aligning shift slots from the batches actually consumed. The fleet
+    driver addresses by micro-step directly because under partial
+    participation a cohort's clients share a PARTICIPATION count, not the
+    global train-step count (DESIGN.md §3.9).
 
     Pass `n_slots` (the wire's `CompressedAggregation.n_slots`) to verify
     the shift tables cover the sampler's index range — an out-of-range
@@ -341,7 +525,7 @@ def shared_slots_for_step(sampler: ReshuffleSampler, step: int,
             f"has only n_slots={n_slots} shift rows — out-of-range slots "
             "would silently clamp onto the last row; build the aggregation "
             "with n_slots == sampler.n")
-    cols = slots_for_step(sampler, step, local_steps)
+    cols = EpochIterator(sampler, start=micro_step).take(count)
     if not (cols == cols[:1]).all():
         raise ValueError(
             f"sampler mode {sampler.mode!r} gives clients different batch "
@@ -350,12 +534,23 @@ def shared_slots_for_step(sampler: ReshuffleSampler, step: int,
     return cols[0]
 
 
+def shared_slots_for_step(sampler: ReshuffleSampler, step: int,
+                          local_steps: int = 1, *,
+                          n_slots: int | None = None) -> np.ndarray:
+    """(local_steps,) SHARED slot indices for full-participation train step
+    `step` (every client at micro-step `step * local_steps`); see
+    `shared_slots_at` for the contract."""
+    return shared_slots_at(sampler, step * local_steps, local_steps,
+                           n_slots=n_slots)
+
+
 # ---------------------------------------------------------------------------
 # simulator + dry-run entry points (the same order source, other consumers)
 # ---------------------------------------------------------------------------
 
 def run_epochs(epoch_fn, state, data, sampler: ReshuffleSampler, *,
-               epochs: int, key, start_epoch: int = 0, jit: bool = True):
+               epochs: int, key, start_epoch: int = 0, jit: bool = True,
+               callback=None):
     """Drive a simulator epoch fn (`core.algorithms.make_epoch_fn`) through
     the SAME stateless sampler as the production stream.
 
@@ -364,6 +559,9 @@ def run_epochs(epoch_fn, state, data, sampler: ReshuffleSampler, *,
     trajectory is a pure function of `(state, data, sampler, key, e)`:
     checkpointing `state` after epoch e-1 and calling again with
     `start_epoch=e` bit-reproduces the uninterrupted run.
+
+    `callback(e, state)` fires after each epoch (metric tracking for the
+    paper-table experiments) — it does not influence the trajectory.
     """
     import jax
     import jax.numpy as jnp
@@ -372,6 +570,8 @@ def run_epochs(epoch_fn, state, data, sampler: ReshuffleSampler, *,
     for e in range(start_epoch, start_epoch + epochs):
         order = jnp.asarray(sampler.epoch_order(e))
         state = ep(state, data, jax.random.fold_in(key, e), order)
+        if callback is not None:
+            callback(e, state)
     return state
 
 

@@ -1,0 +1,27 @@
+"""Partial participation at population scale (DESIGN.md §3.9).
+
+The mesh's client ranks stop being *the* M clients and become the cohort
+slots a population of C >> M clients rotates through:
+
+- `CohortSampler` — client-level random reshuffling: shuffle the population
+  once per fleet epoch, walk it in cohorts (every client participates
+  exactly once per fleet epoch), with an i.i.d. `with_replacement` baseline;
+- `ClientStateStore` — host-backed (numpy, mmap-friendly) sharded store of
+  per-client persistent state: DIANA shifts / DIANA-RR slot tables, data
+  cursors, uplink bit counters; `gather(cohort)`/`scatter(cohort, ...)` are
+  the O(cohort) device boundary;
+- `FleetRunner` — drives the UNCHANGED jitted train step over sampled
+  cohorts (`launch.steps.with_cohort_shifts` swaps the gathered slices in).
+
+The simulator cross-check lives in `repro.core.algorithms.run_fleet_rounds`.
+"""
+from repro.fleet.cohort import COHORT_MODES, CohortSampler
+from repro.fleet.driver import FleetRunner
+from repro.fleet.store import ClientStateStore
+
+__all__ = [
+    "COHORT_MODES",
+    "CohortSampler",
+    "ClientStateStore",
+    "FleetRunner",
+]

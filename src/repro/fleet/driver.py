@@ -1,0 +1,172 @@
+"""Production fleet driver: partial participation around the jitted step.
+
+`launch.steps.make_train_step` compiles a step for the mesh's M client
+ranks; this driver decouples those ranks from the client *population*: each
+round it samples a cohort of `M = num_clients(mesh)` clients from a
+population of C (`CohortSampler`), swaps the cohort's persistent shifts
+from the host `ClientStateStore` into `TrainState.shifts`
+(`steps.with_cohort_shifts` — device memory stays O(cohort)), feeds the
+cohort's batch rows from the per-cohort stream
+(`data.pipeline.CohortStream`), and scatters the updated shifts back after
+the step. The jitted step itself is UNCHANGED — the same compiled function
+a full-participation run calls — which is what makes a
+`cohort == population` cohort-RR run bit-match the flat wire trajectory
+(DESIGN.md §3.9, tests/test_fleet.py).
+
+Server/level wire state (`mean_shift`; `pod_shifts`/`pod_mean_shift` on
+hierarchical meshes, where a "pod" is a group of clients) stays
+device-resident in `TrainState` across rounds, updated incrementally
+exactly as in full participation. See the stale-shift-semantics note in
+DESIGN.md §3.9 for what that means when a client is not sampled for many
+rounds. One topology is rejected up front: flat-mesh NASTYA
+(`local_steps > 1` without a pod axis) maps every CLIENT onto its own pod
+(`configure_agg` sets `client_axes=()`), so the per-client DIANA state
+lands in `pod_shifts` — which this driver does not round-trip through the
+store (ROADMAP open item).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import CohortStream
+from repro.fleet.cohort import CohortSampler
+from repro.fleet.store import ClientStateStore
+from repro.launch import steps as _steps
+from repro.launch.mesh import num_clients
+
+
+class FleetRunner:
+    """Drives a compiled train step over a sampled-cohort population.
+
+    Parameters mirror what `train.py` already holds: the `make_train_step`
+    outputs, the bound aggregation config, the population-sized
+    client-stacked `data` + its stateless `ReshuffleSampler`, the
+    `CohortSampler`, and the `ClientStateStore`. `start_round` resumes the
+    walk; the runner verifies the restored store's per-client cursors
+    against the cohort walk's closed-form replay, so a checkpoint from a
+    different cohort/sampler config cannot silently resume.
+    """
+
+    def __init__(self, jitted, abstract, shardings, batch_sh, *, agg, mesh,
+                 data, sampler, cohorts: CohortSampler,
+                 store: ClientStateStore, local_steps: int = 1,
+                 prefetch: bool = True, start_round: int = 0):
+        m = num_clients(mesh)
+        if cohorts.cohort_size != m:
+            raise ValueError(
+                f"cohort_size={cohorts.cohort_size} must equal the mesh's "
+                f"client rank count {m} — the step is compiled for M mesh "
+                "clients and the cohort fills exactly those ranks")
+        if store.population != cohorts.population:
+            raise ValueError(
+                f"store population {store.population} != cohort sampler "
+                f"population {cohorts.population}")
+        agg = _steps.configure_agg(agg, mesh, local_steps)
+        if agg.rule.has_shifts and not agg.client_axes:
+            raise ValueError(
+                "fleet partial participation cannot run pod-granular NASTYA "
+                "on a flat mesh: with client_axes=() every client is its own "
+                "pod and the per-client DIANA state lives in TrainState."
+                "pod_shifts, which the store does not round-trip (ROADMAP "
+                "open item) — use a multi-pod mesh (per-client shifts stay "
+                "intra-pod) or local_steps=1")
+        self._slotted = agg.rule.slotted
+        if self._slotted:
+            # the per-slot wire reads/writes ONE shared table row per round
+            # (DESIGN.md §3.8): every cohort client must sit at the same
+            # data position. Cohort-RR keeps participation counts equal
+            # within a cohort only when cohorts never straddle a fleet-epoch
+            # boundary; i.i.d. sampling never keeps them equal.
+            if cohorts.mode != "rr" or cohorts.population % m != 0:
+                raise ValueError(
+                    "per-slot methods (diana_rr) need cohort-RR with "
+                    "population divisible by the cohort size: a cohort that "
+                    "straddles a fleet-epoch boundary (or i.i.d. cohorts) "
+                    "mixes clients at different data positions, and the "
+                    "shared-slot wire contract breaks (DESIGN.md §3.9)")
+            if sampler.mode != "rr_shared":
+                raise ValueError(
+                    "per-slot methods need ReshuffleSampler(mode="
+                    "'rr_shared') so every client walks the same index "
+                    "order (DESIGN.md §3.8)")
+            if sampler.n > agg.n_slots:
+                raise ValueError(
+                    f"sampler draws batch indices in [0, {sampler.n}) but "
+                    f"the wire has n_slots={agg.n_slots} shift rows")
+        self._jitted = jitted
+        self._shardings = shardings
+        self._store = store
+        self._local_steps = int(local_steps)
+        self._stream = CohortStream(
+            data, sampler, cohorts, local_steps=local_steps,
+            put=lambda b: jax.device_put(b, batch_sh(b)), prefetch=prefetch,
+            start_round=start_round)
+        if not np.array_equal(store.cursor, self._stream.counts):
+            raise ValueError(
+                "store per-client cursors disagree with the cohort walk at "
+                f"round {start_round} — the checkpoint was written by a "
+                "different cohort/sampler config (or rounds are missing)")
+        # per-client uplink bits per round: this client's compressed slab on
+        # the level it talks on (the intra-pod wire; on pod-granular NASTYA
+        # meshes every client is its own pod and talks on the outer level)
+        wire = agg.wire_bytes_per_round(abstract.params)
+        self._bits_per_client = 8.0 * (
+            wire["intra_pod"] if agg.client_axes else wire["inter_pod"])
+
+    @property
+    def store(self) -> ClientStateStore:
+        return self._store
+
+    @property
+    def round(self) -> int:
+        """Next unconsumed round (the checkpointable fleet cursor)."""
+        return self._stream.round
+
+    def checkpoint_meta(self) -> dict:
+        """JSON-serializable fleet cursor + sampler/store specs for the
+        checkpoint manifest (`checkpoint.save_fleet_checkpoint`)."""
+        return {**self._stream.cursor_meta(),
+                "store": self._store.spec(),
+                "bits_per_client_round": self._bits_per_client}
+
+    def run(self, state, key, rounds: int,
+            callback: Callable[[int, Any, dict], None] | None = None):
+        """Advance `rounds` fleet rounds from `state`; returns the final
+        TrainState. `callback(round, state, metrics)` fires per round
+        (logging/checkpoint hooks). The store is updated in place."""
+        store = self._store
+        for _ in range(rounds):
+            fr = next(self._stream)
+            state = _steps.with_cohort_shifts(
+                state, store.gather(fr.cohort), self._shardings)
+            if self._slotted:
+                if not (fr.cols == fr.cols[:1]).all():
+                    raise RuntimeError(
+                        "cohort clients disagree on the round's batch "
+                        "indices — shared-slot invariant broken (this is a "
+                        "bug: the constructor gates should have rejected "
+                        "the config)")
+                slots = jnp.asarray(fr.cols[0], jnp.int32)
+                state, metrics = self._jitted(state, fr.batch, key, slots)
+            else:
+                state, metrics = self._jitted(state, fr.batch, key)
+            if store.has_shifts:
+                store.scatter(fr.cohort, jax.device_get(state.shifts))
+            store.advance(fr.cohort, self._local_steps)
+            store.add_bits(fr.cohort, self._bits_per_client)
+            if callback is not None:
+                callback(fr.round, state, metrics)
+        return state
+
+    def close(self):
+        self._stream.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,268 @@
+"""Host-backed sharded per-client state store for fleet-scale training.
+
+Device memory holds O(cohort) state; the population's persistent per-client
+state lives here, on the host, sharded along the client axis:
+
+  - DIANA shifts: one control variate per client (`(C, *param)` per leaf) or
+    a DIANA-RR slot table (`(C, n_slots, *param)`), in the wire's
+    `shift_dtype` so a gather/scatter round-trip is lossless;
+  - per-client data cursors: micro-steps each client has consumed (drives
+    the per-cohort batch stream, `data.pipeline.CohortStream`);
+  - per-client uplink bit counters (float64 — host-side, no x64 ceremony).
+
+Each leaf is a list of `shard_size`-row numpy arrays. With `path=...` the
+shards are `np.memmap` files (one per leaf per shard) — zero pages are
+never materialized, so a 10^5-client store costs disk sparsely and RSS only
+for the rows actually touched. `gather(cohort)` returns device-ready
+`(m, [n_slots,] *param)` slices that plug straight into the existing
+`ShiftRule` layer (`core/rules.py`); `scatter(cohort, updated)` writes the
+round's results back. The wire and simulator run unchanged math on the
+gathered slice (DESIGN.md §3.9).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+             for p, _ in flat]
+    return names, [l for _, l in flat], treedef
+
+
+def _np_dtype(dtype) -> np.dtype:
+    """Portable numpy dtype for a (possibly jax) dtype; bf16 via ml_dtypes."""
+    name = str(np.dtype(dtype)) if not hasattr(dtype, "name") else dtype.name
+    if name == "bfloat16":
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+class ClientStateStore:
+    """Sharded host store of per-client persistent state.
+
+    Build with :meth:`create` (zeros, the fresh-run layout) and restore a
+    checkpoint into it with :meth:`load_tree`. `population` rows are split
+    into ceil(C / shard_size) shards; every accessor takes a SORTED cohort
+    id vector (the canonical order `CohortSampler` emits).
+    """
+
+    def __init__(self, *, population: int, shard_size: int,
+                 shift_leaves: list[list[np.ndarray]] | None,
+                 shift_names: list[str], shift_treedef,
+                 cursor: np.ndarray, bits: np.ndarray,
+                 n_slots: int, path: str | None):
+        self.population = int(population)
+        self.shard_size = int(shard_size)
+        self._shift_leaves = shift_leaves  # [leaf][shard] row-block arrays
+        self._shift_names = shift_names
+        self._shift_treedef = shift_treedef
+        self.cursor = cursor  # (C,) int64 micro-steps consumed per client
+        self.bits = bits  # (C,) float64 cumulative uplink bits per client
+        self.n_slots = int(n_slots)
+        self.path = path
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def create(cls, params, population: int, rule, *, n_slots: int = 1,
+               dtype=np.float32, shard_size: int = 65_536,
+               path: str | None = None) -> "ClientStateStore":
+        """Zero store shaped for `rule` over `params`-shaped clients.
+
+        `rule` is a `repro.core.rules.ShiftRule`: rules without memory
+        (`has_shifts=False`) get a shift-less store (cursors/bits only);
+        slotted rules insert the `n_slots` axis after the client axis.
+        `params` may be concrete arrays or ShapeDtypeStructs. `path` makes
+        every shard an `np.memmap` under that directory.
+        """
+        if population < 1:
+            raise ValueError(f"population={population}")
+        if shard_size < 1:
+            raise ValueError(f"shard_size={shard_size}")
+        dt = _np_dtype(dtype)
+        names, leaves, treedef = _leaf_paths(params)
+        shift_leaves = None
+        if rule.has_shifts:
+            lead = (n_slots,) if rule.slotted else ()
+            if path is not None:
+                os.makedirs(path, exist_ok=True)
+            shift_leaves = []
+            for name, leaf in zip(names, leaves):
+                shards = []
+                for s, rows in _shard_rows(population, shard_size):
+                    shape = (rows,) + lead + tuple(leaf.shape)
+                    if path is None:
+                        shards.append(np.zeros(shape, dt))
+                    else:
+                        fn = os.path.join(
+                            path, f"{name.replace('/', '.')}.{s}.dat")
+                        shards.append(
+                            np.memmap(fn, dtype=dt, mode="w+", shape=shape))
+                shift_leaves.append(shards)
+        return cls(population=population, shard_size=shard_size,
+                   shift_leaves=shift_leaves, shift_names=names,
+                   shift_treedef=treedef,
+                   cursor=np.zeros((population,), np.int64),
+                   bits=np.zeros((population,), np.float64),
+                   n_slots=n_slots, path=path)
+
+    @staticmethod
+    def estimate_nbytes(params, population: int, rule, *, n_slots: int = 1,
+                        dtype=np.float32) -> int:
+        """Host bytes a `create` call would back (without allocating) —
+        the dry-run's fleet sizing number."""
+        if not rule.has_shifts:
+            return population * (8 + 8)  # cursors + bit counters
+        slot = n_slots if rule.slotted else 1
+        per_client = sum(
+            int(np.prod(l.shape)) for l in jax.tree.leaves(params)
+        ) * slot * _np_dtype(dtype).itemsize
+        return population * (per_client + 8 + 8)
+
+    @property
+    def has_shifts(self) -> bool:
+        return self._shift_leaves is not None
+
+    @property
+    def num_shards(self) -> int:
+        return -(-self.population // self.shard_size)
+
+    def spec(self) -> dict:
+        """JSON-serializable layout description (checkpoint validation)."""
+        return {"population": self.population,
+                "shard_size": self.shard_size, "n_slots": self.n_slots,
+                "leaves": list(self._shift_names) if self.has_shifts else []}
+
+    # -- sharded row access --------------------------------------------------
+
+    def _check_cohort(self, cohort: np.ndarray) -> np.ndarray:
+        cohort = np.asarray(cohort, np.int64)
+        if cohort.ndim != 1:
+            raise ValueError(f"cohort must be a 1-D id vector, got shape "
+                             f"{cohort.shape}")
+        if cohort.size and (cohort[0] < 0 or cohort[-1] >= self.population):
+            raise ValueError(
+                f"cohort ids outside [0, {self.population})")
+        if np.any(np.diff(cohort) <= 0):
+            raise ValueError(
+                "cohort must be strictly increasing — sorted, distinct ids "
+                "(the canonical CohortSampler order); duplicates would make "
+                "scatter ill-defined")
+        return cohort
+
+    def _take(self, shards: list[np.ndarray], idx: np.ndarray) -> np.ndarray:
+        out = np.empty((idx.size,) + shards[0].shape[1:], shards[0].dtype)
+        sid = idx // self.shard_size
+        for s in np.unique(sid):
+            sel = sid == s
+            out[sel] = shards[s][idx[sel] - s * self.shard_size]
+        return out
+
+    def _put(self, shards: list[np.ndarray], idx: np.ndarray,
+             values: np.ndarray) -> None:
+        sid = idx // self.shard_size
+        for s in np.unique(sid):
+            sel = sid == s
+            shards[s][idx[sel] - s * self.shard_size] = values[sel]
+
+    # -- the gather/scatter contract ------------------------------------------
+
+    def gather(self, cohort: np.ndarray):
+        """Cohort shift slices: a pytree with leaves `(m, [n_slots,] *param)`
+        in the store dtype — exactly the client-stacked layout
+        `TrainState.shifts` / `FedState.shifts` hold for resident clients,
+        ready for `device_put` onto the shift shardings. None for
+        memory-free rules."""
+        if not self.has_shifts:
+            return None
+        cohort = self._check_cohort(cohort)
+        leaves = [self._take(shards, cohort)
+                  for shards in self._shift_leaves]
+        return jax.tree_util.tree_unflatten(self._shift_treedef, leaves)
+
+    def scatter(self, cohort: np.ndarray, updated) -> None:
+        """Write a round's updated cohort slices back (inverse of gather).
+        Accepts jax or numpy leaves; dtype must round-trip losslessly (the
+        wire keeps tables in the store's `shift_dtype`)."""
+        if not self.has_shifts:
+            if updated is not None:
+                raise ValueError("store holds no shifts (memory-free rule) "
+                                 "but scatter got a value")
+            return
+        cohort = self._check_cohort(cohort)
+        _, leaves, _ = _leaf_paths(updated)
+        if len(leaves) != len(self._shift_leaves):
+            raise ValueError(
+                f"scatter tree has {len(leaves)} leaves, store holds "
+                f"{len(self._shift_leaves)}")
+        for shards, leaf in zip(self._shift_leaves, leaves):
+            arr = np.asarray(leaf)
+            want = (cohort.size,) + shards[0].shape[1:]
+            if arr.shape != want:
+                raise ValueError(
+                    f"scatter leaf shape {arr.shape} != cohort slice {want}")
+            self._put(shards, cohort, arr.astype(shards[0].dtype, copy=False))
+
+    # -- cursors / accounting --------------------------------------------------
+
+    def cursors(self, cohort: np.ndarray) -> np.ndarray:
+        """(m,) per-client micro-step cursors for the cohort."""
+        return self.cursor[self._check_cohort(cohort)].copy()
+
+    def advance(self, cohort: np.ndarray, micro_steps: int) -> None:
+        """Advance the cohort's data cursors after a round."""
+        self.cursor[self._check_cohort(cohort)] += int(micro_steps)
+
+    def add_bits(self, cohort: np.ndarray, bits_per_client: float) -> None:
+        """Charge a round's uplink bits to the participating clients."""
+        self.bits[self._check_cohort(cohort)] += float(bits_per_client)
+
+    # -- checkpointing ----------------------------------------------------------
+
+    def as_tree(self) -> dict:
+        """The store as a plain pytree of numpy arrays (per-shard, no
+        concatenation) for `checkpoint.save_pytree`. Shapes are a pure
+        function of `spec()`, so a fresh `create` + `load_tree` restores."""
+        tree: dict[str, Any] = {"cursor": self.cursor, "bits": self.bits}
+        if self.has_shifts:
+            tree["shifts"] = {
+                name: list(shards)
+                for name, shards in zip(self._shift_names,
+                                        self._shift_leaves)}
+        return tree
+
+    def load_tree(self, tree: dict) -> None:
+        """Restore `as_tree()` output in place (shapes/dtypes must match —
+        build the store with the run's own `create` first)."""
+        self.cursor[...] = np.asarray(tree["cursor"], np.int64)
+        self.bits[...] = np.asarray(tree["bits"], np.float64)
+        if not self.has_shifts:
+            return
+        shifts = tree["shifts"]
+        for name, shards in zip(self._shift_names, self._shift_leaves):
+            loaded = shifts[name]
+            if len(loaded) != len(shards):
+                raise ValueError(
+                    f"{name}: checkpoint has {len(loaded)} shards, store "
+                    f"{len(shards)} — population/shard_size mismatch")
+            for dst, src in zip(shards, loaded):
+                arr = np.asarray(src)
+                if arr.shape != dst.shape:
+                    raise ValueError(
+                        f"{name}: shard shape {arr.shape} != {dst.shape}")
+                dst[...] = arr.astype(dst.dtype, copy=False)
+
+
+def _shard_rows(population: int, shard_size: int):
+    """Yield (shard_index, rows_in_shard)."""
+    for s in range(-(-population // shard_size)):
+        lo = s * shard_size
+        yield s, min(shard_size, population - lo)

@@ -95,11 +95,59 @@ def _probe_cfg(cfg, k: int):
     return dataclasses.replace(cfg, **changes)
 
 
+def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1):
+    """Fleet sizing at population scale C — NO population-sized allocation.
+
+    Proves, next to the compiled step, that the fleet layer scales: the
+    cohort walk draws valid mesh-rank-sized cohorts, the host store's
+    byte footprint is a closed-form estimate (`estimate_nbytes`), and the
+    per-round device shift memory is O(cohort) — every TrainState shift
+    table is keyed on the MESH client count, so the population size must
+    not appear in any device shape (DESIGN.md §3.9).
+    """
+    import numpy as np
+
+    from repro.fleet import ClientStateStore, CohortSampler
+    from repro.launch import steps
+
+    m = num_clients(mesh)
+    agg_c = steps.configure_agg(agg, mesh, local_steps)
+    abstract = steps.abstract_train_state(cfg, agg, m, mesh=mesh,
+                                          local_steps=local_steps)
+    cohorts = CohortSampler(clients, m, seed=0)
+    for r in (0, 1, clients // m):  # incl. a fleet-epoch-straddling round
+        c = cohorts.cohort_for_round(r)
+        assert c.shape == (m,) and 0 <= c[0] and c[-1] < clients
+        assert (np.diff(c) > 0).all(), "cohorts must be sorted + distinct"
+    # O(cohort) device memory: every per-client device table is keyed on
+    # the MESH client count, never the population (checking the client
+    # leading axis specifically — bare `clients in shape` membership would
+    # false-positive whenever C coincides with a model dimension)
+    shift_leaves = [] if abstract.shifts is None else jax.tree.leaves(
+        abstract.shifts)
+    for leaf in shift_leaves:
+        assert leaf.shape[0] == m, (
+            f"device shift table leading dim {leaf.shape} != cohort size "
+            f"{m} — per-client state must stay O(cohort)")
+    device_shift_bytes = sum(
+        int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        for l in shift_leaves)
+    store_bytes = ClientStateStore.estimate_nbytes(
+        abstract.params, clients, agg_c.rule, n_slots=agg_c.n_slots,
+        dtype=agg_c.shift_dtype)
+    return {"population": clients, "cohort": m,
+            "cohort_mode": "rr",
+            "rounds_per_fleet_epoch": clients / m,
+            "device_shift_bytes": device_shift_bytes,
+            "store_bytes": store_bytes}
+
+
 def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                agg_method: str = "diana", agg_wire: str = "shared",
                fraction: float = 0.02, remat="full", ce: str = "gather",
                seq_shard: bool = True, probes: bool = True,
-               local_steps: int = 1, extra_tags: dict | None = None):
+               local_steps: int = 1, clients: int | None = None,
+               extra_tags: dict | None = None):
     """Lower + compile one (arch, shape, mesh). Returns a result dict.
 
     Protocol (DESIGN.md §6): the FULL-depth model is compiled with the
@@ -156,6 +204,9 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
         "model_params": cfg.param_count(),
         "active_params": cfg.active_param_count(),
     }
+    if clients is not None and shape.kind == "train":
+        result["fleet"] = fleet_smoke(cfg, mesh, agg, clients,
+                                      local_steps=local_steps)
 
     # 2) depth probes (unrolled) -> affine extrapolation of cost terms
     if probes:
@@ -215,6 +266,11 @@ def main(argv=None):
     ap.add_argument("--no-seq-shard", dest="seq_shard", action="store_false")
     ap.add_argument("--local-steps", type=int, default=1,
                     help="NASTYA local mini-epochs per round (pod granularity)")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="fleet population size: record cohort-walk + "
+                         "state-store sizing next to the compile and assert "
+                         "device shift memory stays O(cohort) — DESIGN.md "
+                         "§3.9 (train shapes only)")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the unrolled depth probes (report raw scan "
                          "cost terms, which count loop bodies once)")
@@ -237,6 +293,7 @@ def main(argv=None):
                     agg_wire=args.wire, fraction=args.fraction,
                     remat=args.remat, ce=args.ce, seq_shard=args.seq_shard,
                     probes=not args.no_probes, local_steps=args.local_steps,
+                    clients=args.clients,
                     extra_tags={"tag": args.tag} if args.tag else None,
                 )
             except Exception as e:  # a dry-run failure is a sharding bug

@@ -25,6 +25,12 @@
 
 `make_prefill_step` / `make_serve_step` are pure-GSPMD inference paths (no
 client wire — serving has no gradients to compress).
+
+The step's `shifts` are NOT assumed to belong to mesh-resident clients:
+under partial participation (`repro.fleet`, DESIGN.md §3.9) each round's
+cohort slice is swapped in via `with_cohort_shifts` and scattered back to
+the host `ClientStateStore` after the step — same compiled step, O(cohort)
+device memory.
 """
 from __future__ import annotations
 
@@ -201,6 +207,25 @@ def train_state_shardings(mesh, state: TrainState, agg) -> TrainState:
                              sharding.slotted_specs(state.params, mesh=mesh,
                                                     n_slots=pod_nslots)),
     )
+
+
+def with_cohort_shifts(state: TrainState, host_shifts, shardings: TrainState
+                       ) -> TrainState:
+    """Swap cohort-gathered shift slices into a TrainState (fleet path).
+
+    The train step never assumes `shifts` belongs to mesh-resident clients —
+    it runs the rule arithmetic on whatever (M, [n_slots,] *param) slice it
+    is handed. Under partial participation (`repro.fleet.FleetRunner`) that
+    slice is the round's cohort, gathered from the host
+    `ClientStateStore` and placed onto the step's shift shardings here;
+    after the step the runner scatters `state.shifts` back. `host_shifts`
+    is None for memory-free methods ('q'/'dense') — the state passes
+    through untouched. Device memory stays O(cohort), never O(population).
+    """
+    if host_shifts is None:
+        return state
+    return state._replace(
+        shifts=jax.device_put(host_shifts, shardings.shifts))
 
 
 # ---------------------------------------------------------------------------

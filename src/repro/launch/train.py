@@ -10,6 +10,16 @@ Every piece is the production path: shard_map per-client gradients, the
 paper's compressed wire, DIANA shifts, the epoch-indexed RR batch stream
 (`data.pipeline`, DESIGN.md §3.7) with double-buffered prefetch, and
 cursor-checkpointed resume (`--resume` bit-reproduces the data stream).
+
+`--clients C` (with C > the mesh client count) switches to the FLEET path
+(DESIGN.md §3.9): each round samples a cohort of mesh-rank-many clients
+from a C-client population (`--cohort-mode rr` walks a fresh population
+permutation per fleet epoch — client-level RR; `with_replacement` is the
+i.i.d. baseline), DIANA(-RR) shifts live in a host-sharded
+`ClientStateStore` and only the cohort's slices touch the device, and
+`--checkpoint/--resume` persist the store + fleet cursor so a resumed run
+bit-reproduces an uninterrupted one. With C equal to the mesh client count
+the fleet path bit-matches this file's full-participation loop.
 """
 import os
 
@@ -26,11 +36,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_meta, restore_train_state, save_pytree
+from repro.checkpoint.io import (
+    restore_fleet_checkpoint,
+    save_fleet_checkpoint,
+)
 from repro.configs import ARCH_NAMES, get_config, reduced
 from repro.core.dist import CompressedAggregation
 from repro.data.pipeline import make_batch_stream, shared_slots_for_step
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
+from repro.fleet import COHORT_MODES, CohortSampler, ClientStateStore, FleetRunner
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh, make_test_mesh, num_clients
 
@@ -56,7 +71,93 @@ def stub_modalities(cfg, m: int, n_batches: int, b: int, *, seed: int = 0):
     return extras
 
 
-def main():
+def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
+              jitted, abstract, shardings, batch_sh):
+    """The fleet (partial-participation) loop: C-client population, cohort
+    of m mesh ranks per round, host state store (DESIGN.md §3.9).
+
+    The synthetic population DATASET is still materialized dense on the
+    host (O(C * n * b * seq) — fine for this driver's demo scales; the
+    per-client shift STATE is what the store keeps O(cohort) on device and
+    mmap-sharded on host). Paging per-client datasets behind the same
+    per-cohort view is the recorded ROADMAP open item.
+    """
+    C = args.clients
+    data = {"tokens": np.asarray(synthetic_token_batches(
+        vocab=cfg.vocab, seq_len=args.seq, batch=b,
+        num_batches=n_batches, num_clients=C, seed=0))}
+    data.update(stub_modalities(cfg, C, n_batches, b))
+    sampler = ReshuffleSampler(C, n_batches, mode=args.sampling, seed=1)
+    cohorts = CohortSampler(C, m, mode=args.cohort_mode, seed=2)
+    store = ClientStateStore.create(
+        abstract.params, C, agg.rule, n_slots=agg.n_slots,
+        dtype=agg.shift_dtype, path=args.store_path)
+    est = ClientStateStore.estimate_nbytes(
+        abstract.params, C, agg.rule, n_slots=agg.n_slots,
+        dtype=agg.shift_dtype)
+    print(f"fleet: population {C}, cohort {m} ({args.cohort_mode}), "
+          f"store {est/1e6:.1f}MB "
+          + (f"mmap@{args.store_path}" if args.store_path else "host RAM")
+          + " / O(cohort) device")
+
+    start_round = 0
+    if args.resume:
+        meta = load_meta(args.resume)
+        fm = (meta.get("meta") or {}).get("fleet")
+        if fm is None:
+            raise SystemExit(f"{args.resume}: no fleet cursor in manifest — "
+                             "not a fleet checkpoint?")
+        if fm["sampler"] != sampler.spec() or \
+                fm["cohort_sampler"] != cohorts.spec() or \
+                fm["local_steps"] != args.local_steps:
+            raise SystemExit(
+                f"{args.resume}: checkpointed fleet walk {fm} does not "
+                "match this run's samplers/local_steps — refusing to "
+                "resume onto a different cohort walk")
+        start_round = fm["round"]
+
+    key = jax.random.key(1)
+    t0 = time.time()
+    with compat.set_mesh(mesh):
+        if args.resume:
+            state = restore_fleet_checkpoint(args.resume, abstract,
+                                             shardings, store)
+            print(f"resumed {args.resume} at round {start_round} "
+                  f"(fleet epoch {fm['fleet_epoch']})")
+        else:
+            state = jax.device_put(
+                steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                       optimizer=args.optimizer, mesh=mesh,
+                                       local_steps=args.local_steps),
+                shardings)
+        runner = FleetRunner(
+            jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
+            data=data, sampler=sampler, cohorts=cohorts, store=store,
+            local_steps=args.local_steps, prefetch=args.prefetch,
+            start_round=start_round)
+
+        def log(t, _state, metrics):
+            if t % args.log_every == 0 or t == args.steps - 1:
+                print(f"round {t:5d} | loss {float(metrics['loss']):8.4f} | "
+                      f"gnorm {float(metrics['grad_norm']):9.3f} | "
+                      f"{(time.time()-t0)/(t-start_round+1):6.2f}s/round",
+                      flush=True)
+
+        with runner:
+            state = runner.run(state, key, args.steps - start_round,
+                               callback=log)
+            if args.checkpoint:
+                save_fleet_checkpoint(
+                    args.checkpoint, jax.device_get(state), store,
+                    step=int(state.step),
+                    meta={"fleet": runner.checkpoint_meta()})
+                print(f"fleet checkpoint -> {args.checkpoint} "
+                      f"(round {runner.round})")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface (separate so tests can assert the module docstring's
+    example flags stay parseable — flag/doc drift is a bug)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="stablelm-1.6b")
     ap.add_argument("--steps", type=int, default=50)
@@ -77,7 +178,9 @@ def main():
                          "paper's per-slot shifts (Algorithm 3) and needs "
                          "--sampling rr_shared, 'ef' is error feedback")
     ap.add_argument("--wire", choices=("shared", "independent"), default="shared")
-    ap.add_argument("--fraction", type=float, default=0.05)
+    # the paper's headline compression ratio (k/d ~= 0.02, Sec. 3) — must
+    # stay in sync with the module-docstring example above
+    ap.add_argument("--fraction", type=float, default=0.02)
     ap.add_argument("--pods", type=int, default=1,
                     help="CPU test-mesh pods: >1 builds a (pods, 4/pods, 2) "
                          "('pod','data','model') mesh for the two-level wire")
@@ -85,6 +188,19 @@ def main():
                     default="sgd")
     ap.add_argument("--sampling", choices=("rr", "rr_once", "rr_shared", "wr"),
                     default="rr")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="fleet population size C: sample a cohort of "
+                         "mesh-rank-many clients per round from C clients "
+                         "whose shifts live in a host state store "
+                         "(DESIGN.md §3.9); default = full participation")
+    ap.add_argument("--cohort-mode", choices=COHORT_MODES, default="rr",
+                    help="'rr' = cohort-RR (every client once per fleet "
+                         "epoch); 'with_replacement' = i.i.d. baseline")
+    ap.add_argument("--store-path", default=None,
+                    help="back the fleet client-state store with np.memmap "
+                         "shards under this directory (zero pages cost "
+                         "nothing on disk); default keeps shards in host "
+                         "RAM — large --clients runs want this")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--checkpoint", default=None, help="save state here at end")
@@ -94,6 +210,11 @@ def main():
     ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
                     help="disable the double-buffered host prefetch")
     ap.add_argument("--log-every", type=int, default=10)
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
 
     if args.production_mesh:
@@ -117,6 +238,21 @@ def main():
                  "wire reads/writes one shared shift-table row per round, "
                  "so every client must walk its data in the same index "
                  "order (DESIGN.md §3.8)")
+    if args.clients is not None:
+        if args.clients < m:
+            ap.error(f"--clients {args.clients} < mesh client ranks {m}: "
+                     "the cohort fills every mesh rank each round")
+        if slotted and (args.cohort_mode != "rr" or args.clients % m != 0):
+            ap.error("--agg diana_rr on the fleet path needs --cohort-mode "
+                     "rr and --clients divisible by the mesh client count "
+                     "(shared-slot wire contract, DESIGN.md §3.9)")
+        if args.local_steps > 1 and "pod" not in mesh.axis_names and \
+                args.agg in ("diana", "diana_rr", "ef"):
+            ap.error("--clients with --local-steps>1 needs a pod mesh "
+                     "(--pods>1 or --multi-pod): flat-mesh NASTYA makes "
+                     "every client its own pod, so per-client shifts land "
+                     "in pod_shifts — not round-tripped by the fleet store "
+                     "(ROADMAP open item)")
     agg = CompressedAggregation(method=args.agg, wire=args.wire,
                                 fraction=args.fraction,
                                 n_slots=n_batches if slotted else 1,
@@ -129,9 +265,14 @@ def main():
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
     print(f"arch={cfg.name} ({n_params/1e6:.1f}M params) clients={m} "
           f"agg={args.agg}/{args.wire} k/d={args.fraction} "
-          f"local_steps={args.local_steps} opt={args.optimizer}")
+          f"local_steps={args.local_steps} opt={args.optimizer}"
+          + (f" fleet=C{args.clients}/{args.cohort_mode}"
+             if args.clients is not None else ""))
 
     b = max(1, args.batch // m)
+    if args.clients is not None:
+        return run_fleet(args, cfg, mesh, agg, m, n_batches, b,
+                         jitted, abstract, shardings, batch_sh)
     data = {"tokens": synthetic_token_batches(
         vocab=cfg.vocab, seq_len=args.seq, batch=b,
         num_batches=n_batches, num_clients=m, seed=0)}

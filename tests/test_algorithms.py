@@ -167,3 +167,21 @@ def test_error_feedback_fixes_topk():
     naked = run("q_rr")  # same Top-k compressor, no error memory
     assert ef < 5e-3, f"EF Top-k failed to converge: {ef}"
     assert ef < naked * 0.5, (ef, naked)
+
+
+def test_fedstate_bits_lo_default_matches_init_state_dtype():
+    """FedState's NamedTuple default for bits_lo must be a strongly-typed
+    f32 scalar like init_state builds — a bare Python 0.0 made tree maps
+    over hand-built states promote (f64 leaves under numpy semantics)."""
+    import numpy as np
+
+    from repro.core.api import FedState, init_state
+
+    hand = FedState(params={"w": jnp.zeros((2,))}, shifts=None,
+                    server_h=None, rounds=jnp.zeros((), jnp.int32),
+                    bits=jnp.zeros((), jnp.float32))
+    ref = init_state({"w": jnp.zeros((2,))})
+    assert np.asarray(hand.bits_lo).dtype == np.float32
+    assert np.asarray(hand.bits_lo).shape == np.asarray(ref.bits_lo).shape
+    summed = jax.tree.map(lambda a, b: jnp.add(a, b), hand, ref)
+    assert summed.bits_lo.dtype == jnp.float32

@@ -1,0 +1,609 @@
+"""fleet/ — partial participation at population scale (DESIGN.md §3.9).
+
+Covers the cohort-RR walk, the sharded client-state store's gather/scatter
+contract (DIANA single shifts AND DIANA-RR slot tables), the per-cohort
+stream view, the simulator fleet driver, and the production acceptance
+criteria: a cohort == population cohort-RR fleet run bit-matches today's
+full-participation wire trajectory (params, shift tables, bits) for
+`diana` and `diana_rr` on the 1-pod and 2-pod meshes, and fleet `--resume`
+is bit-deterministic.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import CohortStream, make_batch_stream
+from repro.data.reshuffle import ReshuffleSampler
+from repro.fleet import CohortSampler, ClientStateStore, FleetRunner
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 forced host devices"
+)
+
+
+# ---------------------------------------------------------------------------
+# CohortSampler: the client-level RR walk
+# ---------------------------------------------------------------------------
+
+def test_cohort_rr_visits_every_client_once_per_fleet_epoch():
+    """C=10, m=4: cohorts straddle the fleet-epoch boundary mid-round
+    (round 2 takes the last 2 clients of epoch 0 and the first 2 of epoch
+    1), yet after any whole number of fleet epochs every client has
+    participated exactly that many times."""
+    cs = CohortSampler(10, 4, seed=3)
+    counts = np.zeros(10, np.int64)
+    for r in range(5):  # 5 rounds * 4 = 20 slots = exactly 2 fleet epochs
+        cohort = cs.cohort_for_round(r)
+        assert cohort.shape == (4,)
+        assert (np.diff(cohort) > 0).all(), "sorted, distinct"
+        counts[cohort] += 1
+    assert (counts == 2).all(), counts
+    # the straddling round really mixes two epochs' (effective) orders
+    e0, e1 = cs.effective_order(0), cs.effective_order(1)
+    straddle = cs.cohort_for_round(2)
+    assert set(straddle) == set(e0[8:]) | set(e1[:2])
+    # ... and each effective order is still a full permutation (exactly
+    # once per epoch even with the head deconflicted against e0's tail)
+    assert sorted(e1.tolist()) == list(range(10))
+    # closed-form participation counts == replayed counts, mid-epoch too
+    for r in range(6):
+        replay = np.zeros(10, np.int64)
+        for q in range(r):
+            replay[cs.cohort_for_round(q)] += 1
+        assert np.array_equal(cs.participation_counts(r), replay), r
+
+
+def test_cohort_straddle_deconfliction():
+    """Adjacent epochs' raw permutations are independent, so a straddling
+    cohort could draw the same client from epoch e's tail and epoch e+1's
+    head — ill-defined for the store scatter. Regression: seed 0 on
+    (C=10, m=4) puts client 1 in both; the effective order moves it out of
+    the straddling round's reach while keeping exactly-once coverage.
+    Sweeps seeds/shapes, and checks cold-cache random access (a resumed
+    run's first lookup) matches the sequential walk."""
+    raw = CohortSampler(10, 4, seed=0)
+    # round 2 takes epoch 0's last 2 slots + epoch 1's first 2: the raw
+    # draws collide there (this is the seed the bug reproduced with)
+    assert np.intersect1d(raw.epoch_order(0)[8:],
+                          raw.epoch_order(1)[:2]).size > 0
+    assert (np.diff(raw.cohort_for_round(2)) > 0).all()
+    for seed in range(8):
+        for C, m in ((10, 4), (7, 3), (13, 5), (9, 2)):
+            cs = CohortSampler(C, m, seed=seed)
+            rounds = [cs.cohort_for_round(r) for r in range(3 * C // m + 2)]
+            for r, co in enumerate(rounds):
+                assert (np.diff(co) > 0).all(), (seed, C, m, r, co)
+            for e in range(3):
+                assert sorted(cs.effective_order(e).tolist()) == \
+                    list(range(C)), (seed, C, m, e)
+            cold = CohortSampler(C, m, seed=seed)
+            r = len(rounds) - 1
+            assert np.array_equal(cold.cohort_for_round(r), rounds[r])
+
+
+def test_cohort_sampler_idempotent_and_stateless():
+    cs = CohortSampler(12, 4, seed=7)
+    a = [cs.cohort_for_round(r) for r in range(4)]
+    b = [CohortSampler(12, 4, seed=7).cohort_for_round(r) for r in range(4)]
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    assert cs.cursor(0) == (0, 0)
+    assert cs.cursor(3) == (1, 0)
+    assert cs.cursor(4) == (1, 4)
+
+
+def test_with_replacement_mode_distinct_within_round():
+    cs = CohortSampler(20, 6, mode="with_replacement", seed=1)
+    seen = []
+    for r in range(10):
+        c = cs.cohort_for_round(r)
+        assert (np.diff(c) > 0).all(), "distinct ids (scatter well-defined)"
+        seen.append(tuple(c))
+    assert len(set(seen)) > 1, "i.i.d. across rounds"
+    assert np.array_equal(cs.cohort_for_round(3), seen[3])
+    # replayed counts drive the resume path for the i.i.d. baseline
+    replay = np.zeros(20, np.int64)
+    for r in range(7):
+        replay[cs.cohort_for_round(r)] += 1
+    assert np.array_equal(cs.participation_counts(7), replay)
+
+
+def test_cohort_sampler_validation():
+    with pytest.raises(ValueError):
+        CohortSampler(4, 8)
+    with pytest.raises(ValueError):
+        CohortSampler(4, 2, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# ClientStateStore: sharded gather/scatter round-trip
+# ---------------------------------------------------------------------------
+
+def _params():
+    return {"w": jnp.zeros((3, 5), jnp.float32), "b": jnp.zeros((4,))}
+
+
+@pytest.mark.parametrize("rule_name,lead", [("single", ()), ("per_slot", (2,))])
+def test_store_gather_scatter_roundtrip(rule_name, lead):
+    """Gather -> mutate -> scatter -> re-gather is the identity on the
+    cohort rows and a no-op on everyone else, across shard boundaries
+    (shard_size=3 splits an 11-client population into 4 shards), for both
+    the DIANA single-shift and the DIANA-RR slot-table layouts."""
+    from repro.core.rules import get_rule
+
+    store = ClientStateStore.create(_params(), 11, get_rule(rule_name),
+                                    n_slots=2, shard_size=3)
+    cohort = np.array([0, 2, 5, 10])  # hits shards 0, 0, 1, 3
+    got = store.gather(cohort)
+    assert got["w"].shape == (4,) + lead + (3, 5)
+    assert got["b"].shape == (4,) + lead + (4,)
+    rng = np.random.default_rng(0)
+    upd = jax.tree.map(
+        lambda x: rng.normal(size=x.shape).astype(np.float32), got)
+    store.scatter(cohort, upd)
+    back = store.gather(cohort)
+    for k in upd:
+        assert np.array_equal(back[k], upd[k]), k
+    rest = np.array([1, 3, 4, 6, 7, 8, 9])
+    for leaf in jax.tree.leaves(store.gather(rest)):
+        assert np.abs(leaf).max() == 0, "untouched clients stay zero"
+    # cursors + bit counters ride the same cohort addressing
+    store.advance(cohort, 2)
+    store.add_bits(cohort, 640.0)
+    assert store.cursors(cohort).tolist() == [2] * 4
+    assert store.cursors(rest).tolist() == [0] * 7
+    assert store.bits[cohort].tolist() == [640.0] * 4
+
+
+def test_store_memmap_backing(tmp_path):
+    from repro.core.rules import get_rule
+
+    store = ClientStateStore.create(_params(), 9, get_rule("single"),
+                                    shard_size=4, path=str(tmp_path))
+    assert store.num_shards == 3
+    cohort = np.array([3, 4, 8])
+    upd = store.gather(cohort)
+    upd = jax.tree.map(lambda x: x + 1.25, upd)
+    store.scatter(cohort, upd)
+    got = store.gather(cohort)
+    assert np.array_equal(got["w"], upd["w"])
+    assert len(list(tmp_path.iterdir())) == 2 * 3  # 2 leaves x 3 shards
+
+
+def test_store_rejects_bad_cohorts():
+    from repro.core.rules import get_rule
+
+    store = ClientStateStore.create(_params(), 8, get_rule("single"),
+                                    shard_size=4)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        store.gather(np.array([2, 1]))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        store.gather(np.array([1, 1, 2]))
+    with pytest.raises(ValueError, match="outside"):
+        store.gather(np.array([1, 8]))
+    got = store.gather(np.array([0, 1]))
+    with pytest.raises(ValueError, match="cohort slice"):
+        store.scatter(np.array([0, 1, 2]), got)
+
+
+# ---------------------------------------------------------------------------
+# CohortStream: the per-cohort view of the population stream
+# ---------------------------------------------------------------------------
+
+def test_cohort_stream_full_participation_matches_batch_stream():
+    """cohort == population under cohort-RR: every round samples every
+    client in ascending order, so the emitted batches are bitwise the
+    full-participation BatchStream's — the stream half of the fleet
+    bit-match invariant. Runs across a data-epoch boundary."""
+    m, n, b = 4, 3, 2
+    data = {"x": np.arange(m * n * b * 5, dtype=np.float32).reshape(
+        m, n, b, 5)}
+    sampler = ReshuffleSampler(m, n, mode="rr", seed=1)
+    with CohortStream(data, sampler, CohortSampler(m, m, seed=0),
+                      local_steps=2) as cstream, \
+            make_batch_stream(data, sampler, local_steps=2,
+                              prefetch=False) as bstream:
+        for t in range(2 * n):
+            fr = next(cstream)
+            assert fr.round == t
+            assert np.array_equal(fr.cohort, np.arange(m))
+            assert np.array_equal(fr.batch["x"], next(bstream)["x"]), t
+
+
+def test_cohort_stream_partial_rows_follow_per_client_cursors():
+    """Partial participation: a sampled client's rows come from ITS next RR
+    position (clients advance only when sampled), modalities stay aligned,
+    and a stream rebuilt at `start_round` replays identically."""
+    C, n, b, m = 6, 3, 2, 2
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(size=(C, n, b, 4)).astype(np.float32),
+            "y": rng.normal(size=(C, n, b)).astype(np.float32)}
+    sampler = ReshuffleSampler(C, n, mode="rr", seed=4)
+    cohorts = CohortSampler(C, m, seed=9)
+    counts = np.zeros(C, np.int64)
+    rounds = []
+    with CohortStream(data, sampler, cohorts, prefetch=False) as stream:
+        for t in range(8):
+            fr = next(stream)
+            rounds.append(fr)
+            for i, c in enumerate(fr.cohort):
+                e, pos = divmod(counts[c], n)
+                want = sampler.epoch_order(e)[c, pos]
+                assert fr.cols[i, 0] == want, (t, c)
+                assert np.array_equal(fr.batch["x"][i * b:(i + 1) * b],
+                                      data["x"][c, want])
+                assert np.array_equal(fr.batch["y"][i * b:(i + 1) * b],
+                                      data["y"][c, want])
+            counts[fr.cohort] += 1
+    with CohortStream(data, sampler, cohorts, prefetch=False,
+                      start_round=5) as resumed:
+        for t in range(5, 8):
+            fr = next(resumed)
+            assert np.array_equal(fr.cohort, rounds[t].cohort)
+            assert np.array_equal(fr.batch["x"], rounds[t].batch["x"]), t
+
+
+def test_cohort_stream_prefetch_matches_sync():
+    C, n, b, m = 5, 3, 1, 2
+    data = {"x": np.arange(C * n * b * 2, dtype=np.float32).reshape(
+        C, n, b, 2)}
+    sampler = ReshuffleSampler(C, n, seed=2)
+    args = (data, sampler, CohortSampler(C, m, seed=1))
+    with CohortStream(*args, prefetch=True) as pre, \
+            CohortStream(*args, prefetch=False) as sync:
+        for _ in range(7):
+            a, s = next(pre), next(sync)
+            assert a.round == s.round
+            assert np.array_equal(a.batch["x"], s.batch["x"])
+
+
+# ---------------------------------------------------------------------------
+# simulator fleet driver (core.algorithms.run_fleet_rounds)
+# ---------------------------------------------------------------------------
+
+def _logreg(m, seed=0):
+    from repro.data.logreg import make_federated_logreg
+
+    return make_federated_logreg(m=m, n_batches=4, batch=5, d=32, cond=50.0,
+                                 seed=seed)
+
+
+@pytest.mark.parametrize("name", ["q_rr", "diana", "diana_rr"])
+def test_run_fleet_rounds_full_participation_matches_epoch_driver(name):
+    """cohort == population, exact compression: n fleet rounds ARE one
+    `_nonlocal_epoch` scan — params agree with `run_epochs` to float
+    noise, and the store's shift tables equal FedState.shifts."""
+    from repro.compression.ops import RandK
+    from repro.core.algorithms import (
+        ALGORITHMS, init_algorithm, make_epoch_fn, run_fleet_rounds)
+    from repro.core.rules import get_rule
+    from repro.data.pipeline import run_epochs
+
+    prob = _logreg(m=6)
+    loss = prob.loss_fn()
+    params0 = {"w": jnp.zeros((prob.d,))}
+    spec = ALGORITHMS[name]
+    rule = get_rule(spec.shift_mode)
+    sampler = ReshuffleSampler(prob.m, prob.n, mode="rr_once", seed=2)
+    store = ClientStateStore.create(params0, prob.m, rule, n_slots=prob.n,
+                                    shard_size=4)
+    pf, info = run_fleet_rounds(
+        name, loss, RandK(fraction=1.0), gamma=0.05, params=params0,
+        data=prob.data, sampler=sampler, store=store,
+        cohort_sampler=CohortSampler(prob.m, prob.m, seed=1),
+        rounds=2 * prob.n, key=jax.random.PRNGKey(0))
+    _, epoch = make_epoch_fn(name, loss, RandK(fraction=1.0), gamma=0.05)
+    st = init_algorithm(spec, params0, prob.m, prob.n)
+    st = run_epochs(epoch, st, prob.data, sampler, epochs=2,
+                    key=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(pf["w"]),
+                               np.asarray(st.params["w"]), atol=1e-6)
+    if rule.has_shifts:
+        got = store.gather(np.arange(prob.m))
+        np.testing.assert_allclose(np.asarray(got["w"]),
+                                   np.asarray(st.shifts["w"]), atol=1e-6)
+    assert info["rounds"] == 2 * prob.n
+    assert np.array_equal(store.cursor, np.full(prob.m, 2 * prob.n))
+
+
+def test_run_fleet_rounds_partial_participation_converges():
+    """DIANA with a 3-of-12 cohort on heterogeneous logreg: suboptimality
+    drops by >10x, bits are charged per participation, and the store's
+    cursors equal the closed-form cohort walk."""
+    from repro.compression.ops import RandK
+    from repro.core.algorithms import run_fleet_rounds
+    from repro.core.rules import get_rule
+
+    prob = _logreg(m=12, seed=1)
+    params0 = {"w": jnp.zeros((prob.d,))}
+    store = ClientStateStore.create(params0, 12, get_rule("single"),
+                                    shard_size=5)
+    cohorts = CohortSampler(12, 3, seed=7)
+    sub0 = prob.suboptimality(params0["w"])
+    p, info = run_fleet_rounds(
+        "diana", prob.loss_fn(), RandK(fraction=0.5), gamma=0.05,
+        params=params0, data=prob.data,
+        sampler=ReshuffleSampler(12, 4, mode="rr", seed=3), store=store,
+        cohort_sampler=cohorts, rounds=200, key=jax.random.PRNGKey(5))
+    assert prob.suboptimality(p["w"]) < 0.1 * sub0
+    assert np.array_equal(store.cursor, cohorts.participation_counts(200))
+    assert store.bits.sum() == pytest.approx(info["bits"])
+    # per-client accounting: bits proportional to participations
+    assert np.array_equal(store.bits > 0, store.cursor > 0)
+
+
+def test_run_fleet_rounds_rejects_local_family():
+    from repro.core.algorithms import make_round_fn
+
+    with pytest.raises(ValueError, match="local-family"):
+        make_round_fn("q_nastya", lambda p, b: 0.0, gamma=0.1)
+
+
+# ---------------------------------------------------------------------------
+# production acceptance: cohort == population bit-matches the flat wire
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs import get_config, reduced
+
+    cfg = reduced(get_config("stablelm-1.6b"), seq=8)
+    return dataclasses.replace(cfg, dtype=jnp.float32)
+
+
+def _fleet_setup(mesh, method, *, n=3):
+    from repro.core.dist import CompressedAggregation
+    from repro.launch import steps
+    from repro.launch.mesh import num_clients
+
+    cfg = _tiny_cfg()
+    m = num_clients(mesh)
+    slotted = method == "diana_rr"
+    agg = CompressedAggregation(method=method, wire="shared", fraction=0.5,
+                                n_slots=n if slotted else 1,
+                                shift_dtype=jnp.float32)
+    jitted, abstract, shardings, batch_sh = steps.make_train_step(
+        cfg, mesh, agg=agg, lr=0.05, remat=False, seq_shard=False)
+    return cfg, m, agg, jitted, abstract, shardings, batch_sh
+
+
+def _population_tokens(cfg, C, n, b, seq, seed=0):
+    from repro.data.tokens import synthetic_token_batches
+
+    return {"tokens": np.asarray(synthetic_token_batches(
+        vocab=cfg.vocab, seq_len=seq, batch=b, num_batches=n,
+        num_clients=C, seed=seed))}
+
+
+@needs_mesh
+@pytest.mark.parametrize("method", ["diana", "diana_rr"])
+@pytest.mark.parametrize("mesh_name", ["mesh_4x2", "mesh_2x2x2"])
+def test_fleet_full_cohort_bit_matches_flat_wire(method, mesh_name, request):
+    """THE acceptance criterion: with C == mesh clients and cohort-RR, the
+    fleet path (host store + per-round gather/scatter through
+    `with_cohort_shifts`) walks a bitwise-identical trajectory to today's
+    full-participation loop — params AND shift tables — on the 1-pod and
+    2-pod meshes, and charges exactly the static per-round uplink bits."""
+    from repro.core.rules import WIRE_RULES
+    from repro.data.pipeline import shared_slots_for_step
+    from repro.launch import compat, steps
+
+    mesh = request.getfixturevalue(mesh_name)
+    n, b, seq, total = 3, 1, 8, 4
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, method, n=n)
+    data = _population_tokens(cfg, m, n, b, seq)
+    mode = "rr_shared" if method == "diana_rr" else "rr"
+    key = jax.random.key(4)
+
+    with compat.set_mesh(mesh):
+        # A: today's full-participation pipeline-fed loop
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh), shardings)
+        sampler = ReshuffleSampler(m, n, mode=mode, seed=1)
+        with make_batch_stream(
+                data, sampler,
+                put=lambda bt: jax.device_put(bt, batch_sh(bt))) as stream:
+            for t in range(total):
+                if method == "diana_rr":
+                    slots = jnp.asarray(shared_slots_for_step(
+                        sampler, t, n_slots=agg.n_slots))
+                    state, _ = jitted(state, next(stream), key, slots)
+                else:
+                    state, _ = jitted(state, next(stream), key)
+        ref = jax.device_get(state)
+
+        # B: the fleet path with cohort == population
+        state2 = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh), shardings)
+        store = ClientStateStore.create(
+            abstract.params, m, WIRE_RULES[method], n_slots=agg.n_slots,
+            dtype=np.float32, shard_size=3)
+        with FleetRunner(jitted, abstract, shardings, batch_sh, agg=agg,
+                         mesh=mesh, data=data,
+                         sampler=ReshuffleSampler(m, n, mode=mode, seed=1),
+                         cohorts=CohortSampler(m, m, seed=9),
+                         store=store) as runner:
+            state2 = runner.run(state2, key, total)
+            bits_per_client = runner.checkpoint_meta()[
+                "bits_per_client_round"]
+        flt = jax.device_get(state2)
+
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref.params),
+            jax.tree_util.tree_leaves_with_path(flt.params)):
+        assert np.asarray(a).tobytes() == np.asarray(bb).tobytes(), pa
+    got = store.gather(np.arange(m))
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref.shifts),
+            jax.tree_util.tree_leaves_with_path(got)):
+        assert np.asarray(a).tobytes() == np.asarray(bb).tobytes(), pa
+    assert bits_per_client > 0
+    assert (store.bits == total * bits_per_client).all()
+    assert (store.cursor == total).all()
+
+
+@needs_mesh
+def test_fleet_resume_determinism(mesh_4x2, tmp_path):
+    """Fleet --resume: checkpoint (TrainState + store + fleet cursor) cut
+    mid-fleet-epoch at round 3 of a C=10/m=4 walk, restore into a fresh
+    store, continue — metrics, params, store shifts, cursors, and bit
+    counters all bit-match the uninterrupted run."""
+    from repro.checkpoint import (
+        load_meta, restore_fleet_checkpoint, save_fleet_checkpoint)
+    from repro.core.rules import WIRE_RULES
+    from repro.launch import compat, steps
+
+    mesh = mesh_4x2
+    C, n, b, seq, total, cut = 10, 3, 1, 8, 6, 3
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, "diana", n=n)
+    data = _population_tokens(cfg, C, n, b, seq)
+    mk_store = lambda: ClientStateStore.create(
+        abstract.params, C, WIRE_RULES["diana"], dtype=np.float32,
+        shard_size=4)
+    mk_runner = lambda start, store: FleetRunner(
+        jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
+        data=data, sampler=ReshuffleSampler(C, n, mode="rr", seed=1),
+        cohorts=CohortSampler(C, m, seed=9), store=store, start_round=start)
+    key = jax.random.key(4)
+    path = str(tmp_path / "fleet.ckpt")
+
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh), shardings)
+        store = mk_store()
+        runner = mk_runner(0, store)
+        losses_a = []
+
+        def snap(t, st, metrics):
+            losses_a.append(np.asarray(metrics["loss"]).tobytes())
+            if t + 1 == cut:
+                save_fleet_checkpoint(path, jax.device_get(st), store,
+                                      step=t + 1,
+                                      meta={"fleet":
+                                            runner.checkpoint_meta()})
+
+        with runner:
+            state = runner.run(state, key, total, callback=snap)
+        ref, ref_store = jax.device_get(state), store
+
+        fm = load_meta(path)["meta"]["fleet"]
+        assert fm["round"] == cut
+        assert fm["epoch_position"] != 0, "cut must land mid-fleet-epoch"
+        store_b = mk_store()
+        state_b = restore_fleet_checkpoint(path, abstract, shardings,
+                                           store_b)
+        losses_b = []
+        with mk_runner(fm["round"], store_b) as runner_b:
+            state_b = runner_b.run(
+                state_b, key, total - cut,
+                callback=lambda t, st, mx: losses_b.append(
+                    np.asarray(mx["loss"]).tobytes()))
+        flt = jax.device_get(state_b)
+
+    assert losses_b == losses_a[cut:]
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref.params),
+            jax.tree_util.tree_leaves_with_path(flt.params)):
+        assert np.asarray(a).tobytes() == np.asarray(bb).tobytes(), pa
+    everyone = np.arange(C)
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref_store.gather(everyone)),
+            jax.tree_util.tree_leaves_with_path(store_b.gather(everyone))):
+        assert np.array_equal(a, bb), pa
+    assert np.array_equal(ref_store.cursor, store_b.cursor)
+    assert np.array_equal(ref_store.bits, store_b.bits)
+
+
+@needs_mesh
+def test_fleet_partial_participation_trains_and_isolates_state(mesh_4x2):
+    """C=12 > m=4 on the production wire: the run trains (finite losses),
+    only sampled clients' store rows move, device shift tables stay
+    O(cohort), and a wrong-cursor store is rejected at resume."""
+    from repro.launch import compat, steps
+
+    mesh = mesh_4x2
+    C, n, b, seq, total = 12, 3, 1, 8, 2  # 2 of 3 cohorts per fleet epoch
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, "diana", n=n)
+    data = _population_tokens(cfg, C, n, b, seq)
+    from repro.core.rules import WIRE_RULES
+
+    store = ClientStateStore.create(abstract.params, C,
+                                    WIRE_RULES["diana"], dtype=np.float32,
+                                    shard_size=5)
+    cohorts = CohortSampler(C, m, seed=3)
+    sampler = ReshuffleSampler(C, n, mode="rr", seed=1)
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh), shardings)
+        losses = []
+        with FleetRunner(jitted, abstract, shardings, batch_sh, agg=agg,
+                         mesh=mesh, data=data, sampler=sampler,
+                         cohorts=cohorts, store=store) as runner:
+            state = runner.run(
+                state, jax.random.key(2), total,
+                callback=lambda t, st, mx: losses.append(
+                    float(mx["loss"])))
+    assert np.isfinite(losses).all()
+    sampled = np.unique(np.concatenate(
+        [cohorts.cohort_for_round(r) for r in range(total)]))
+    unsampled = np.setdiff1d(np.arange(C), sampled)
+    assert unsampled.size, "C=12/m=4/2 rounds must leave clients unsampled"
+    for leaf in jax.tree.leaves(store.gather(unsampled)):
+        assert np.abs(leaf).max() == 0
+    touched = store.gather(sampled)
+    assert any(np.abs(l).max() > 0 for l in jax.tree.leaves(touched))
+    assert np.array_equal(store.cursor > 0, np.isin(np.arange(C), sampled))
+    # device shift tables are cohort-sized, not population-sized
+    for leaf in jax.tree.leaves(abstract.shifts):
+        assert leaf.shape[0] == m
+    # a store whose cursors disagree with the walk is rejected at resume
+    store.advance(np.array([0]), 1)
+    with pytest.raises(ValueError, match="disagree with the cohort walk"):
+        FleetRunner(jitted, abstract, shardings, batch_sh, agg=agg,
+                    mesh=mesh, data=data, sampler=sampler, cohorts=cohorts,
+                    store=store, start_round=total)
+
+
+@needs_mesh
+def test_fleet_slotted_gates(mesh_4x2):
+    """diana_rr fleet configs that break the shared-slot contract are
+    rejected up front: i.i.d. cohorts, a population not divisible by the
+    cohort (straddling cohorts mix data positions), and non-shared
+    sampler orders (DESIGN.md §3.9)."""
+    from repro.core.rules import WIRE_RULES
+    from repro.launch import compat
+
+    mesh = mesh_4x2
+    n = 3
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, "diana_rr", n=n)
+    mk = lambda C, cmode, smode, ls=1: FleetRunner(
+        jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
+        data=_population_tokens(cfg, C, n, 1, 8),
+        sampler=ReshuffleSampler(C, n, mode=smode, seed=1),
+        cohorts=CohortSampler(C, m, mode=cmode, seed=2),
+        store=ClientStateStore.create(abstract.params, C,
+                                      WIRE_RULES["diana_rr"], n_slots=n,
+                                      dtype=np.float32), local_steps=ls)
+    with compat.set_mesh(mesh):
+        with pytest.raises(ValueError, match="shared-slot"):
+            mk(8, "with_replacement", "rr_shared")
+        with pytest.raises(ValueError, match="divisible"):
+            mk(10, "rr", "rr_shared")
+        with pytest.raises(ValueError, match="rr_shared"):
+            mk(8, "rr", "rr")
+        # flat-mesh NASTYA: per-client shifts land in pod_shifts, which
+        # the store does not round-trip — rejected before the slot gates
+        with pytest.raises(ValueError, match="pod_shifts"):
+            mk(8, "rr", "rr_shared", ls=2)
+        runner = mk(8, "rr", "rr_shared")  # valid: 8 % 4 == 0
+        runner.close()

@@ -175,3 +175,22 @@ def test_serve_step_sharded(arch):
         logits, new_cache = jitted(params, cache, tokens, jnp.int32(0))
         assert logits.shape == (B, 1, cfg.padded_vocab())
         assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_docstring_example_flags_stay_valid():
+    """Doc/flag drift guard: the module docstring's example command must
+    parse through the real argparse surface, and the --fraction default
+    must equal the value the docstring advertises (the paper's k/d)."""
+    import re
+
+    from repro.launch import train
+
+    m = re.search(r"python -m repro\.launch\.train (.+?)\n\n", train.__doc__,
+                  re.S)
+    assert m, "train.py docstring lost its example command line"
+    example = m.group(1).replace("\\\n", " ").replace(
+        "[--production-mesh]", "")
+    parser = train.build_parser()
+    args = parser.parse_args(example.split())
+    assert args.fraction == parser.get_default("fraction") == 0.02
+    assert "--fraction 0.02" in train.__doc__
