@@ -510,6 +510,93 @@ def run_fleet_bench(*, quick: bool, reps: int):
     return out
 
 
+def run_fleet_async_bench(*, quick: bool, reps: int):
+    """Buffered-async fleet rounds (DESIGN.md §3.10) vs the synchronous loop.
+
+    Per round the async driver adds: one `AsyncPlanner` call (the
+    deterministic K-of-m participation plan), a per-rank weights vector fed
+    to the device update, and a completer-sliced scatter (dropped/late-drop
+    clients keep their store rows untouched — exactly-once). This times the
+    full host round-trip at dropout ∈ {0, 0.1, 0.3} against the synchronous
+    round from `run_fleet_bench`'s pattern. The claim under test: the async
+    machinery is host-side O(cohort) bookkeeping — round latency stays
+    within noise of synchronous, and rising dropout only SHRINKS the
+    scatter.
+    """
+    from repro.core.rules import get_rule
+    from repro.fleet import (AsyncPlanner, ChaosConfig, ClientStateStore,
+                             CohortSampler)
+
+    m = 8
+    d = 4_096 if quick else 32_768
+    rounds = 20 if quick else 50
+    pop = 1_000
+    params = {"w": np.zeros((d,), np.float32)}
+    rule = get_rule("single")
+    alpha = 0.25
+    q = jnp.ones((m, d), jnp.float32)
+    sync_update = jax.jit(lambda h: h + alpha * q)
+    elastic_update = jax.jit(lambda h, w: h + alpha * (q * w[:, None]))
+
+    print(f"\n--- fleet async: cohort {m} x d={d:,}, K-of-m buffer "
+          + "-" * 24)
+    out = {"cohort": m, "d": d, "population": pop}
+
+    def time_rounds(round_fn):
+        round_fn(0)  # warm (compile + touch store pages)
+        times = []
+        for r in range(reps):
+            t0 = time.perf_counter()
+            for t in range(rounds):
+                round_fn(1 + r * rounds + t)
+            times.append((time.perf_counter() - t0) / rounds)
+        return float(np.median(times))
+
+    # synchronous baseline: every rank completes every round
+    store = ClientStateStore.create(params, pop, rule, dtype=np.float32,
+                                    shard_size=16_384)
+    cohorts = CohortSampler(pop, m, seed=0)
+
+    def sync_round(t):
+        cohort = cohorts.cohort_for_round(t)
+        hd = jax.device_put(store.gather(cohort))
+        hd = {"w": sync_update(hd["w"])}
+        store.scatter(cohort, jax.device_get(hd))
+
+    sync_s = time_rounds(sync_round)
+    print(f"async  sync       {fmt(sync_s)}")
+    out["sync_round_s"] = sync_s
+
+    for drop in (0.0, 0.1, 0.3):
+        store = ClientStateStore.create(params, pop, rule, dtype=np.float32,
+                                        shard_size=16_384)
+        cohorts = CohortSampler(pop, m, seed=0)
+        planner = AsyncPlanner(m, buffer_k=max(1, (3 * m) // 4),
+                               late="drop",
+                               chaos=ChaosConfig(dropout=drop, seed=11))
+
+        def async_round(t, cohorts=cohorts, planner=planner, store=store):
+            cohort = cohorts.cohort_for_round(t)
+            plan = planner(t, cohort)
+            comp = plan.completes
+            if not comp.any():
+                return  # buffer never fills: no launch, no store writes
+            hd = jax.device_put(store.gather(cohort))
+            hd = {"w": elastic_update(hd["w"], jnp.asarray(plan.weights))}
+            idx = np.flatnonzero(comp)
+            host = jax.device_get(hd)
+            store.scatter(cohort[idx], {"w": host["w"][idx]})
+
+        sec = time_rounds(async_round)
+        label = f"drop={drop}"
+        over = sec / sync_s
+        print(f"async  {label:10s} {fmt(sec)}   ({over:5.2f}x sync, "
+              f"K={planner.buffer_k}/{m})")
+        out[label] = {"round_s": sec, "overhead_x_vs_sync": over,
+                      "dropout": drop, "buffer_k": planner.buffer_k}
+    return out
+
+
 def check_baseline(results: dict, baseline_path: str) -> bool:
     """CI guard: fail when the pallas-vs-reference (and pallas-vs-seed)
     Rand-k speedups regress below the committed BENCH_compression.json.
@@ -589,6 +676,9 @@ def main() -> None:
 
     results["fleet"] = run_fleet_bench(quick=args.quick,
                                        reps=max(3, reps // 2))
+
+    results["fleet_async"] = run_fleet_async_bench(quick=args.quick,
+                                                   reps=max(3, reps // 2))
 
     sp = results["scales"]["logreg"]["randk_speedup_pallas_vs_seed"]
     results["meta"]["elapsed_s"] = round(time.time() - t0, 1)

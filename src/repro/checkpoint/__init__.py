@@ -1,4 +1,5 @@
 from repro.checkpoint.io import (
+    CheckpointError,
     load_meta,
     load_pytree,
     restore_fleet_checkpoint,
@@ -7,5 +8,6 @@ from repro.checkpoint.io import (
     save_pytree,
 )
 
-__all__ = ["save_pytree", "load_pytree", "load_meta", "restore_train_state",
-           "save_fleet_checkpoint", "restore_fleet_checkpoint"]
+__all__ = ["CheckpointError", "save_pytree", "load_pytree", "load_meta",
+           "restore_train_state", "save_fleet_checkpoint",
+           "restore_fleet_checkpoint"]

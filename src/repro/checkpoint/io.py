@@ -20,6 +20,25 @@ import numpy as np
 _FORMAT_VERSION = 1
 
 
+class CheckpointError(RuntimeError):
+    """The file is not a readable repro checkpoint (truncated, corrupt, or
+    a different format). Raised instead of the raw msgpack/json/numpy
+    decode traceback so callers can tell a bad file from a code bug."""
+
+
+# exceptions the msgpack/json/numpy decode stack throws on a truncated or
+# corrupt blob; atomic write-then-rename means a live run never leaves a
+# partial file, so any of these signals out-of-band damage
+_DECODE_ERRORS = (msgpack.exceptions.UnpackException, msgpack.exceptions.ExtraData,
+                  ValueError, KeyError, TypeError, EOFError)
+
+
+def _corrupt(path: str, what: str, e: Exception) -> CheckpointError:
+    return CheckpointError(
+        f"{path}: cannot decode {what} — checkpoint is truncated or corrupt "
+        f"({type(e).__name__}: {e})")
+
+
 def _tree_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
@@ -66,15 +85,19 @@ def load_meta(path: str) -> dict:
     before deciding how to rebuild the stream. Streams the msgpack map and
     stops at the manifest entry (save_pytree packs it first), so a
     production-size checkpoint costs one small read, not a full decode."""
-    with open(path, "rb") as f:
-        unpacker = msgpack.Unpacker(f)
-        for _ in range(unpacker.read_map_header()):
-            if unpacker.unpack() == "manifest":
-                manifest = json.loads(unpacker.unpack())
-                return {"step": manifest.get("step"),
-                        "meta": manifest.get("meta")}
-            unpacker.skip()
-    raise KeyError(f"{path}: no manifest entry — not a repro checkpoint")
+    try:
+        with open(path, "rb") as f:
+            unpacker = msgpack.Unpacker(f)
+            for _ in range(unpacker.read_map_header()):
+                if unpacker.unpack() == "manifest":
+                    manifest = json.loads(unpacker.unpack())
+                    return {"step": manifest.get("step"),
+                            "meta": manifest.get("meta")}
+                unpacker.skip()
+    except _DECODE_ERRORS as e:
+        raise _corrupt(path, "manifest", e) from e
+    raise CheckpointError(
+        f"{path}: no manifest entry — not a repro checkpoint")
 
 
 def load_pytree(path: str, like: Any, *, device: bool = True) -> Any:
@@ -86,17 +109,20 @@ def load_pytree(path: str, like: Any, *, device: bool = True) -> Any:
     import jax.numpy as jnp
     import ml_dtypes
 
-    with open(path, "rb") as f:
-        data = msgpack.unpackb(f.read())
-    manifest = json.loads(data["manifest"])
-    by_path = {}
-    for meta, buf in zip(manifest["leaves"], data["buffers"]):
-        if meta["dtype"] == "bfloat16":
-            arr = np.frombuffer(buf, np.uint16).reshape(meta["shape"]).view(
-                ml_dtypes.bfloat16)
-        else:
-            arr = np.frombuffer(buf, np.dtype(meta["dtype"])).reshape(meta["shape"])
-        by_path[meta["path"]] = arr
+    try:
+        with open(path, "rb") as f:
+            data = msgpack.unpackb(f.read())
+        manifest = json.loads(data["manifest"])
+        by_path = {}
+        for meta, buf in zip(manifest["leaves"], data["buffers"]):
+            if meta["dtype"] == "bfloat16":
+                arr = np.frombuffer(buf, np.uint16).reshape(meta["shape"]).view(
+                    ml_dtypes.bfloat16)
+            else:
+                arr = np.frombuffer(buf, np.dtype(meta["dtype"])).reshape(meta["shape"])
+            by_path[meta["path"]] = arr
+    except _DECODE_ERRORS as e:
+        raise _corrupt(path, "leaf buffers", e) from e
 
     paths, leaves, treedef = _tree_paths(like)
     out = []

@@ -130,11 +130,17 @@ class CompressionBackend:
             out = ref.qsgd_quantize_ref(flat, uf, levels=levels, tile=TILE)
         return out.reshape(m, dp)
 
-    def diana_shift_flat(self, h, q_own, mh, q_mean, *, alpha: float):
-        """Fused DIANA update on flat (N,) buffers -> (direction, h', H')."""
+    def diana_shift_flat(self, h, q_own, mh, q_mean, *, alpha: float,
+                         beta: float | None = None):
+        """Fused DIANA update on flat (N,) buffers -> (direction, h', H').
+
+        `beta` is the mean-shift stepsize (H' = H + beta*Q_mean); defaults to
+        alpha. Cohort-sampled fleets pass beta = (M/C)*alpha (DESIGN.md §3.10).
+        """
         if self.is_pallas:
-            return _pallas_diana_shift(h, q_own, mh, q_mean, alpha=alpha)
-        return ref.diana_shift_update_ref(h, q_own, mh, q_mean, alpha)
+            return _pallas_diana_shift(h, q_own, mh, q_mean, alpha=alpha,
+                                       beta=beta)
+        return ref.diana_shift_update_ref(h, q_own, mh, q_mean, alpha, beta)
 
     # -- pytree entry points (the simulator hot path) -------------------------
 
@@ -169,7 +175,7 @@ class CompressionBackend:
         return unravel(dense)
 
     def tree_diana_shift(self, h_tree, qo_tree, mh_tree, qm_tree, *,
-                         alpha: float):
+                         alpha: float, beta: float | None = None):
         """Fused DIANA update over whole pytrees (same structure/shapes).
 
         Returns (direction_tree, h_tree', mh_tree'). On the pallas backend
@@ -186,11 +192,12 @@ class CompressionBackend:
             mh, _ = tree_ravel(mh_tree)
             qm, _ = tree_ravel(qm_tree)
             direction, h_new, mh_new = self.diana_shift_flat(h, qo, mh, qm,
-                                                             alpha=alpha)
+                                                             alpha=alpha,
+                                                             beta=beta)
             return unravel(direction), unravel(h_new), unravel(mh_new)
         h_leaves, treedef = jax.tree.flatten(h_tree)
         trips = [
-            ref.diana_shift_update_ref(a, b, c, d, alpha)
+            ref.diana_shift_update_ref(a, b, c, d, alpha, beta)
             for a, b, c, d in zip(h_leaves, jax.tree.leaves(qo_tree),
                                   jax.tree.leaves(mh_tree),
                                   jax.tree.leaves(qm_tree))
@@ -203,7 +210,7 @@ class CompressionBackend:
 
     def wire_exchange(self, rows: jax.Array, start_block: jax.Array, *,
                       k_blocks: int, block_rows: int,
-                      axes: tuple[str, ...]):
+                      axes: tuple[str, ...], weight: jax.Array | None = None):
         """One level of the (possibly hierarchical) shared wire: circular
         gather of the k-row slab, then the sparse collective over `axes`.
 
@@ -212,10 +219,16 @@ class CompressionBackend:
         here, each with its own start_block/k_blocks, so only the compressed
         slab ever crosses either wire. Must run inside a shard_map whose
         manual axes include `axes`.
+
+        `weight` (per-rank scalar, pre-normalized so an all-ones cohort gives
+        exactly 1.0) scales this rank's contribution to the collective mean —
+        the buffered-async / elastic-masking hook. Own vals stay unweighted so
+        local shift updates use the client's actual message.
         """
         vals = self.wire_compress(rows, start_block, k_blocks=k_blocks,
                                   block_rows=block_rows)
-        return vals, jax.lax.pmean(vals, axes)
+        shared = vals if weight is None else vals * weight
+        return vals, jax.lax.pmean(shared, axes)
 
     def wire_compress(self, rows: jax.Array, start_block: jax.Array, *,
                       k_blocks: int, block_rows: int) -> jax.Array:

@@ -130,6 +130,10 @@ class CompressedAggregation:
     pod_slots: int | None = None  # outer-level slot rows; None -> n_slots.
     # configure_agg sets 1 on NASTYA paths: the inter-pod exchange carries
     # the slot-free epoch gradient, so rows past 0 would never be touched.
+    mean_scale: float = 1.0  # mean-shift stepsize scale: beta = mean_scale *
+    # alpha at the client-granular level. Cohort-sampled fleets set M/C so
+    # the resident mean shift tracks the population mean h_bar instead of
+    # (C/M)*h_bar (DESIGN.md §3.10); 1.0 = the paper's full-participation form.
     backend: str | None = None  # 'reference' | 'pallas' | None (env/default)
 
     def __post_init__(self):
@@ -226,7 +230,14 @@ class CompressedAggregation:
             return None
         return (slot,)
 
-    def aggregate(self, grads, state: DianaState | None, key, *, slot=None):
+    def _beta(self, alpha: float) -> float | None:
+        """Mean-table stepsize for the client-granular level (None = alpha)."""
+        if self.mean_scale == 1.0:
+            return None
+        return self.mean_scale * alpha
+
+    def aggregate(self, grads, state: DianaState | None, key, *, slot=None,
+                  weight=None):
         """(direction, new_state); call inside shard_map over the wire axes.
 
         Composed two-level exchange: the inner (intra-pod) level over
@@ -237,16 +248,29 @@ class CompressedAggregation:
         `slot` is the round's shared batch index (scalar int32), consumed
         by per-slot methods ('diana_rr') to pick the shift-table row at
         both levels; other methods ignore it.
+
+        `weight` is this rank's participation weight (scalar, pre-normalized
+        by the host so an all-ones cohort gives exactly 1.0): the compressed
+        message is scaled by it before the collective mean, which is how the
+        buffered-async driver masks dropped/padded clients (weight 0) and
+        discounts stale reports. It applies at the client-granular level
+        (inner when `client_axes` is set, outer otherwise); None leaves the
+        wire untouched.
         """
         if self.method == "dense":
             axes = tuple(self.client_axes) + tuple(self.pod_axes)
-            direction = jax.tree.map(lambda g: lax.pmean(g, axes), grads)
+            g_in = grads if weight is None else jax.tree.map(
+                lambda g: g * weight, grads)
+            direction = jax.tree.map(lambda g: lax.pmean(g, axes), g_in)
             return direction, state
-        direction, state = self.aggregate_local(grads, state, key, slot=slot)
-        return self.aggregate_pod(direction, state, key, slot=slot)
+        cw = weight if self.client_axes else None
+        pw = None if self.client_axes else weight
+        direction, state = self.aggregate_local(grads, state, key, slot=slot,
+                                                weight=cw)
+        return self.aggregate_pod(direction, state, key, slot=slot, weight=pw)
 
     def aggregate_local(self, grads, state: DianaState | None, key, *,
-                        slot=None):
+                        slot=None, weight=None):
         """Inner level only: compressed exchange over `client_axes`.
 
         This is what each NASTYA local step runs — the pod's ranks psum
@@ -254,8 +278,10 @@ class CompressedAggregation:
         inter-pod wire is only touched once per epoch by `aggregate_pod`.
         """
         if self.method == "dense":
+            g_in = grads if weight is None else jax.tree.map(
+                lambda g: g * weight, grads)
             direction = jax.tree.map(
-                lambda g: lax.pmean(g, self.client_axes), grads
+                lambda g: lax.pmean(g, self.client_axes), g_in
             )
             return direction, state
         if not self.client_axes:  # a pod of one client: no intra-pod wire
@@ -268,14 +294,15 @@ class CompressedAggregation:
             axes=self.client_axes,
             fold_axes=tuple(self.pod_axes) + tuple(self.client_axes),
             fraction=self.fraction, alpha=self.shift_lr,
-            idx=self._slot_idx(slot),
+            beta=self._beta(self.shift_lr),
+            idx=self._slot_idx(slot), weight=weight,
         )
         if rule.has_shifts:
             state = state._replace(shifts=new_h, mean_shift=new_mh)
         return dirs, state
 
     def aggregate_pod(self, direction, state: DianaState | None, key, *,
-                      slot=None):
+                      slot=None, weight=None):
         """Outer level only: compressed exchange over `pod_axes`.
 
         `key` is the same round key given to `aggregate_local`; the actual
@@ -288,6 +315,9 @@ class CompressedAggregation:
         With a per-slot method and `slot=None` (the NASTYA epoch gradient,
         which has no batch index) the rule falls back to table row 0.
         """
+        if weight is not None and (not self.pod_axes or self.method == "dense"
+                                   or self.pod_size == 1):
+            direction = jax.tree.map(lambda g: g * weight, direction)
         if not self.pod_axes or self.method == "dense":
             if self.pod_axes:
                 direction = jax.tree.map(
@@ -303,11 +333,16 @@ class CompressedAggregation:
         pod_key = jax.random.fold_in(key, POD_KEY_SALT)
         h = state.pod_shifts if rule.has_shifts else None
         mh = state.pod_mean_shift if rule.has_mean else None
+        # weight is only ever non-None here when this outer level IS the
+        # client-granular level (client_axes=(), flat NASTYA fleets), and
+        # then the pod tables are per-client too — so mean_scale applies.
         dirs, new_h, new_mh = self._level(
             direction, h, mh, pod_key,
             axes=self.pod_axes, fold_axes=tuple(self.pod_axes),
             fraction=self._pod_fraction, alpha=self.pod_shift_lr,
-            idx=self._slot_idx(slot),
+            beta=(self._beta(self.pod_shift_lr) if not self.client_axes
+                  else None),
+            idx=self._slot_idx(slot), weight=weight,
         )
         if rule.has_shifts:
             state = state._replace(pod_shifts=new_h, pod_mean_shift=new_mh)
@@ -316,7 +351,7 @@ class CompressedAggregation:
     # -- one exchange level ----------------------------------------------------
 
     def _level(self, grads, h_tree, mh_tree, key, *, axes, fold_axes,
-               fraction, alpha, idx=None):
+               fraction, alpha, beta=None, idx=None, weight=None):
         """One compressed exchange over `axes`: Q per rank, psum, rule update.
 
         Returns (direction_tree, new_shifts_tree, new_mean_shift_tree); the
@@ -326,6 +361,10 @@ class CompressedAggregation:
         drivers run, with the fused diana_shift kernel on the DIANA paths
         (one pass over four inputs, three outputs, instead of five separate
         param-sized HBM round-trips).
+
+        `beta` (None = alpha) is the mean-table stepsize handed to the rule;
+        `weight` scales this rank's message into the collective mean (own
+        message stays unweighted so the local shift update is unchanged).
         """
         rule = self.rule
         compress = (self._exchange_shared if self.wire == "shared"
@@ -335,7 +374,7 @@ class CompressedAggregation:
             out = []
             for i, g in enumerate(leaves):
                 _, q_mean = compress(self._leaf_key(key, i), g, axes,
-                                     fold_axes, fraction)
+                                     fold_axes, fraction, weight=weight)
                 out.append(q_mean.astype(g.dtype))
             return jax.tree.unflatten(treedef, out), None, None
 
@@ -350,10 +389,11 @@ class CompressedAggregation:
             p = rule.payload(g.astype(jnp.float32), h.astype(jnp.float32))
             q_own, q_mean = compress(self._leaf_key(key, i), p, axes,
                                      fold_axes, fraction,
-                                     contractive=rule.contractive)
+                                     contractive=rule.contractive,
+                                     weight=weight)
             direction, h_new, mh_new = rule.update(
                 h, q_own.astype(jnp.float32), mh, q_mean.astype(jnp.float32),
-                alpha=alpha, backend=be, payload=p,
+                alpha=alpha, beta=beta, backend=be, payload=p,
             )
             new_h.append(rule.scatter(ht, idx, h_new.astype(ht.dtype)))
             if mht is not None:
@@ -385,7 +425,7 @@ class CompressedAggregation:
         return nb, max(1, int(fraction * nb))
 
     def _exchange_shared(self, key, delta, axes, fold_axes, fraction,
-                         contractive: bool = False):
+                         contractive: bool = False, weight=None):
         """Shared-key Rand-block exchange of one leaf over `axes`.
 
         Returns (q_own, q_mean) dense reconstructions. Only the k-row slab
@@ -395,7 +435,8 @@ class CompressedAggregation:
         contractive=True divides out the unbiased nb/kb scaling — the
         UNSCALED window projection (contraction factor kb/nb) that error
         feedback requires; the d/k-scaled reconstruction makes the EF
-        residual grow instead of contract.
+        residual grow instead of contract. `weight` scales this rank's slab
+        into the collective mean only (q_own stays unweighted).
         """
         del fold_axes  # shared draw: every rank uses the same key
         be = get_backend(self.backend)
@@ -403,7 +444,8 @@ class CompressedAggregation:
         nb, kb = self._wire_geometry(rows.shape[0], fraction)
         start_block = jax.random.randint(key, (), 0, nb)
         vals, mean_vals = be.wire_exchange(rows, start_block, k_blocks=kb,
-                                           block_rows=BLOCK_ROWS, axes=axes)
+                                           block_rows=BLOCK_ROWS, axes=axes,
+                                           weight=weight)
         if contractive:
             vals = vals * (kb / nb)
             mean_vals = mean_vals * (kb / nb)
@@ -421,13 +463,14 @@ class CompressedAggregation:
     # independent-seed Rand-k: paper-exact, dense collectives ------------------
 
     def _exchange_independent(self, key, delta, axes, fold_axes, fraction,
-                              contractive: bool = False):
+                              contractive: bool = False, weight=None):
         """Unbiased Rand-k over rows (with-replacement indices: omega <= n/k,
         avoids a full permutation sort on device; see DESIGN.md §3), one
         independent draw per rank (key folded with the rank's coordinates
         along `fold_axes`), then a dense psum over `axes`.
         contractive=True keeps the selected rows UNSCALED (set semantics:
-        duplicate draws count once) — the projection error feedback needs."""
+        duplicate draws count once) — the projection error feedback needs.
+        `weight` scales this rank's contribution to the mean only."""
         for ax in fold_axes:
             key = jax.random.fold_in(key, lax.axis_index(ax))
         rows = self._row_view(delta.astype(jnp.float32))
@@ -441,7 +484,8 @@ class CompressedAggregation:
             vals = rows[idx] * (n / k)
             out = jnp.reshape(
                 jnp.zeros_like(rows).at[idx].add(vals), delta.shape)
-        return out, lax.pmean(out, axes)
+        shared = out if weight is None else out * weight
+        return out, lax.pmean(shared, axes)
 
     # -- wire accounting (benchmarks / EXPERIMENTS.md) -------------------------
 

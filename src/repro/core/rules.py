@@ -107,15 +107,18 @@ class ShiftRule:
         return g
 
     def update(self, h, q_own, mh, q_mean, *, alpha: float,
-               gamma: float = 1.0, backend, payload=None):
+               beta: float | None = None, gamma: float = 1.0, backend,
+               payload=None):
         """Post-compression arithmetic: (direction, h_new, mh_new).
 
         h/q/mh are matching pytrees (the simulator passes whole stacked
         trees; the wire passes single leaves). `q_own` is this client's
         compressed message, `q_mean` the aggregated one; the simulator's
-        per-client view passes the same tree for both.
+        per-client view passes the same tree for both. `beta` is the
+        mean-table stepsize (defaults to alpha); cohort-sampled fleets use
+        beta = (M/C)*alpha so the resident mean tracks the population mean.
         """
-        del h, q_own, gamma, backend, payload
+        del h, q_own, beta, gamma, backend, payload
         return q_mean, None, None
 
     def scatter(self, shifts, idx: Index, h_new):
@@ -160,14 +163,16 @@ class SingleShift(ShiftRule):
         del gamma
         return jax.tree.map(jnp.subtract, g, h)
 
-    def update(self, h, q_own, mh, q_mean, *, alpha, gamma=1.0, backend,
-               payload=None):
+    def update(self, h, q_own, mh, q_mean, *, alpha, beta=None, gamma=1.0,
+               backend, payload=None):
         del gamma, payload
         # the fused path: direction = H + Q_mean, h' = h + alpha*Q_own,
-        # H' = H + alpha*Q_mean in ONE pass (kernels/diana_shift.py)
+        # H' = H + beta*Q_mean in ONE pass (kernels/diana_shift.py)
         if isinstance(h, jax.Array):
-            return backend.diana_shift_flat(h, q_own, mh, q_mean, alpha=alpha)
-        return backend.tree_diana_shift(h, q_own, mh, q_mean, alpha=alpha)
+            return backend.diana_shift_flat(h, q_own, mh, q_mean, alpha=alpha,
+                                            beta=beta)
+        return backend.tree_diana_shift(h, q_own, mh, q_mean, alpha=alpha,
+                                        beta=beta)
 
     def scatter(self, shifts, idx, h_new):
         del shifts, idx
@@ -233,9 +238,9 @@ class EfRule(ShiftRule):
     def payload(self, g, h, *, gamma: float = 1.0):
         return jax.tree.map(lambda gi, e: gamma * gi + e, g, h)
 
-    def update(self, h, q_own, mh, q_mean, *, alpha, gamma=1.0, backend,
-               payload=None):
-        del h, alpha, backend
+    def update(self, h, q_own, mh, q_mean, *, alpha, beta=None, gamma=1.0,
+               backend, payload=None):
+        del h, alpha, beta, backend
         direction = q_mean if gamma == 1.0 else jax.tree.map(
             lambda q: q / gamma, q_mean)
         new_e = jax.tree.map(jnp.subtract, payload, q_own)

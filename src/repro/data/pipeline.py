@@ -385,13 +385,19 @@ class FleetRound(NamedTuple):
             participation);
     batch:  the assembled (and `put`-applied) client-major
             `(m * local_steps * b)`-row batch, same row contract as
-            `BatchStream`.
+            `BatchStream`;
+    plan:   the round's `ParticipationPlan` when the stream has a planner
+            (buffered-async fleets, `repro.fleet.chaos`): only clients with
+            `plan.completes` had their cursor advanced — the others re-read
+            the SAME cols next time they are sampled (exactly-once RR).
+            None on synchronous streams.
     """
 
     round: int
     cohort: np.ndarray
     cols: np.ndarray
     batch: Any
+    plan: Any = None
 
 
 class CohortStream(_PrefetchStream):
@@ -422,7 +428,8 @@ class CohortStream(_PrefetchStream):
     def __init__(self, data: Mapping[str, Any], sampler: ReshuffleSampler,
                  cohort_sampler, *, local_steps: int = 1,
                  put: PutFn | None = None, prefetch: bool = True,
-                 drop_remainder: bool = True, start_round: int = 0):
+                 drop_remainder: bool = True, start_round: int = 0,
+                 planner=None):
         if local_steps < 1:
             raise ValueError(f"local_steps={local_steps}")
         if sampler.m != cohort_sampler.population:
@@ -441,10 +448,25 @@ class CohortStream(_PrefetchStream):
         self.local_steps = int(local_steps)
         self._put = put
         self._round = int(start_round)
-        # per-client micro-step cursors: closed-form replay of the cohort
-        # walk, so a resumed stream needs no checkpointed sampler state
-        self.counts = (cohort_sampler.participation_counts(start_round)
-                       * self.local_steps)
+        # `planner` (repro.fleet.chaos.AsyncPlanner, or any pure callable
+        # (round, cohort) -> plan with a `.completes` bool mask) gates
+        # cursor advancement: a sampled client consumes its batches only
+        # when its report completes, so dropped/late-dropped clients re-read
+        # the SAME RR positions next time (exactly-once, DESIGN.md §3.10)
+        self._planner = planner
+        if planner is None:
+            # closed-form replay of the cohort walk: every sampled client
+            # completes, so counts need no per-round replay
+            self.counts = (cohort_sampler.participation_counts(start_round)
+                           * self.local_steps)
+        else:
+            # under faults the closed form is invalid — replay the planner
+            # over the skipped prefix (pure in round, O(start_round * m))
+            self.counts = np.zeros(cohort_sampler.population, np.int64)
+            for t in range(int(start_round)):
+                cohort = cohort_sampler.cohort_for_round(t)
+                done = planner(t, cohort).completes
+                self.counts[cohort[done]] += self.local_steps
         self._walk = ClientOrderWalk(sampler)
         super().__init__(prefetch)
 
@@ -466,22 +488,27 @@ class CohortStream(_PrefetchStream):
 
     # -- _PrefetchStream hooks ---------------------------------------------
 
-    def _plan(self) -> tuple[int, np.ndarray, np.ndarray]:
+    def _plan(self) -> tuple[int, np.ndarray, np.ndarray, Any]:
         t = self._round
         cohort = self.cohorts.cohort_for_round(t)
         cols = self._walk.cols_at(cohort, self.counts[cohort],
                                   self.local_steps)
-        self.counts[cohort] += self.local_steps
+        if self._planner is None:
+            self.counts[cohort] += self.local_steps
+            part = None
+        else:
+            part = self._planner(t, cohort)
+            self.counts[cohort[part.completes]] += self.local_steps
         self._round = t + 1
-        return t, cohort, cols
+        return t, cohort, cols, part
 
     def _build(self, plan):
-        _, cohort, cols = plan
+        _, cohort, cols, _ = plan
         return _assemble_rows(self._views, cohort, cols, self._put)
 
     def _emit(self, plan, built) -> FleetRound:
-        t, cohort, cols = plan
-        return FleetRound(t, cohort, cols, built)
+        t, cohort, cols, part = plan
+        return FleetRound(t, cohort, cols, built, part)
 
 
 # ---------------------------------------------------------------------------

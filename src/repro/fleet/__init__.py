@@ -1,4 +1,4 @@
-"""Partial participation at population scale (DESIGN.md §3.9).
+"""Partial participation at population scale (DESIGN.md §3.9–3.10).
 
 The mesh's client ranks stop being *the* M clients and become the cohort
 slots a population of C >> M clients rotates through:
@@ -11,17 +11,36 @@ slots a population of C >> M clients rotates through:
   cursors, uplink bit counters; `gather(cohort)`/`scatter(cohort, ...)` are
   the O(cohort) device boundary;
 - `FleetRunner` — drives the UNCHANGED jitted train step over sampled
-  cohorts (`launch.steps.with_cohort_shifts` swaps the gathered slices in).
+  cohorts (`launch.steps.with_cohort_shifts` swaps the gathered slices in);
+- `AsyncFleetRunner` — buffered-async rounds: FedBuff-style K-of-m buffer
+  trigger, staleness-discounted or dropped late reports with exactly-once
+  RR cursor rewind, elastic cohort resizing via weight-0 padding, and the
+  deterministic fault-injection layer in `repro.fleet.chaos`.
 
 The simulator cross-check lives in `repro.core.algorithms.run_fleet_rounds`.
 """
+from repro.fleet.chaos import (
+    LATE_POLICIES,
+    AsyncPlanner,
+    ChaosConfig,
+    FaultyStore,
+    ParticipationPlan,
+    TransientStoreError,
+)
 from repro.fleet.cohort import COHORT_MODES, CohortSampler
-from repro.fleet.driver import FleetRunner
+from repro.fleet.driver import AsyncFleetRunner, FleetRunner
 from repro.fleet.store import ClientStateStore
 
 __all__ = [
     "COHORT_MODES",
+    "LATE_POLICIES",
+    "AsyncFleetRunner",
+    "AsyncPlanner",
+    "ChaosConfig",
     "CohortSampler",
     "ClientStateStore",
+    "FaultyStore",
     "FleetRunner",
+    "ParticipationPlan",
+    "TransientStoreError",
 ]

@@ -4,28 +4,38 @@
 ranks; this driver decouples those ranks from the client *population*: each
 round it samples a cohort of `M = num_clients(mesh)` clients from a
 population of C (`CohortSampler`), swaps the cohort's persistent shifts
-from the host `ClientStateStore` into `TrainState.shifts`
-(`steps.with_cohort_shifts` — device memory stays O(cohort)), feeds the
-cohort's batch rows from the per-cohort stream
+from the host `ClientStateStore` into the TrainState's client-granular
+shift field (`steps.with_cohort_shifts` — device memory stays O(cohort)),
+feeds the cohort's batch rows from the per-cohort stream
 (`data.pipeline.CohortStream`), and scatters the updated shifts back after
 the step. The jitted step itself is UNCHANGED — the same compiled function
 a full-participation run calls — which is what makes a
 `cohort == population` cohort-RR run bit-match the flat wire trajectory
 (DESIGN.md §3.9, tests/test_fleet.py).
 
+Which TrainState field holds the per-client state depends on the mesh
+topology: `shifts` when the client ranks form the inner wire level, and
+`pod_shifts` on flat-mesh NASTYA (`configure_agg` with `client_axes=()`
+maps every client onto its own pod, so per-client DIANA state lives in the
+outer tables) — the store round-trips either field.
+
 Server/level wire state (`mean_shift`; `pod_shifts`/`pod_mean_shift` on
 hierarchical meshes, where a "pod" is a group of clients) stays
 device-resident in `TrainState` across rounds, updated incrementally
 exactly as in full participation. See the stale-shift-semantics note in
-DESIGN.md §3.9 for what that means when a client is not sampled for many
-rounds. One topology is rejected up front: flat-mesh NASTYA
-(`local_steps > 1` without a pod axis) maps every CLIENT onto its own pod
-(`configure_agg` sets `client_axes=()`), so the per-client DIANA state
-lands in `pod_shifts` — which this driver does not round-trip through the
-store (ROADMAP open item).
+DESIGN.md §3.9 — and set `agg.mean_scale = M/C` so the resident mean shift
+tracks the population mean instead of its (C/M)-inflated cohort estimate.
+
+`AsyncFleetRunner` is the buffered-async variant (DESIGN.md §3.10): the
+server folds a round in once K of m reports arrive, late reports are
+staleness-discounted or dropped with their RR cursor rewound, faults come
+from the deterministic `repro.fleet.chaos` layer, and the cohort can
+shrink/grow between rounds via weight-0 padding — all on the SAME compiled
+(elastic) step.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable
 
 import jax
@@ -33,6 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import CohortStream
+from repro.fleet.chaos import (
+    AsyncPlanner,
+    ChaosConfig,
+    FaultyStore,
+    TransientStoreError,
+)
 from repro.fleet.cohort import CohortSampler
 from repro.fleet.store import ClientStateStore
 from repro.launch import steps as _steps
@@ -47,14 +63,14 @@ class FleetRunner:
     client-stacked `data` + its stateless `ReshuffleSampler`, the
     `CohortSampler`, and the `ClientStateStore`. `start_round` resumes the
     walk; the runner verifies the restored store's per-client cursors
-    against the cohort walk's closed-form replay, so a checkpoint from a
-    different cohort/sampler config cannot silently resume.
+    against the cohort walk's replay, so a checkpoint from a different
+    cohort/sampler config cannot silently resume.
     """
 
     def __init__(self, jitted, abstract, shardings, batch_sh, *, agg, mesh,
                  data, sampler, cohorts: CohortSampler,
                  store: ClientStateStore, local_steps: int = 1,
-                 prefetch: bool = True, start_round: int = 0):
+                 prefetch: bool = True, start_round: int = 0, planner=None):
         m = num_clients(mesh)
         if cohorts.cohort_size != m:
             raise ValueError(
@@ -66,14 +82,19 @@ class FleetRunner:
                 f"store population {store.population} != cohort sampler "
                 f"population {cohorts.population}")
         agg = _steps.configure_agg(agg, mesh, local_steps)
-        if agg.rule.has_shifts and not agg.client_axes:
-            raise ValueError(
-                "fleet partial participation cannot run pod-granular NASTYA "
-                "on a flat mesh: with client_axes=() every client is its own "
-                "pod and the per-client DIANA state lives in TrainState."
-                "pod_shifts, which the store does not round-trip (ROADMAP "
-                "open item) — use a multi-pod mesh (per-client shifts stay "
-                "intra-pod) or local_steps=1")
+        # which TrainState field carries the per-client tables this driver
+        # round-trips: flat-mesh NASTYA maps each client onto its own pod
+        self._shift_field = "shifts" if agg.client_axes else "pod_shifts"
+        if store.has_shifts:
+            want_slots = (agg.n_slots if agg.client_axes
+                          else agg._pod_slots) if agg.rule.slotted else 1
+            if store.n_slots != want_slots:
+                raise ValueError(
+                    f"store n_slots={store.n_slots} but the wire's "
+                    f"{self._shift_field} tables carry {want_slots} slot "
+                    "rows — create the store with the configured agg's "
+                    "slot count (configure_agg collapses outer tables to "
+                    "1 row on NASTYA paths)")
         self._slotted = agg.rule.slotted
         if self._slotted:
             # the per-slot wire reads/writes ONE shared table row per round
@@ -93,10 +114,11 @@ class FleetRunner:
                     "per-slot methods need ReshuffleSampler(mode="
                     "'rr_shared') so every client walks the same index "
                     "order (DESIGN.md §3.8)")
-            if sampler.n > agg.n_slots:
+            n_slots = agg.n_slots if agg.client_axes else agg._pod_slots
+            if sampler.n > n_slots:
                 raise ValueError(
                     f"sampler draws batch indices in [0, {sampler.n}) but "
-                    f"the wire has n_slots={agg.n_slots} shift rows")
+                    f"the wire has n_slots={n_slots} shift rows")
         self._jitted = jitted
         self._shardings = shardings
         self._store = store
@@ -104,12 +126,16 @@ class FleetRunner:
         self._stream = CohortStream(
             data, sampler, cohorts, local_steps=local_steps,
             put=lambda b: jax.device_put(b, batch_sh(b)), prefetch=prefetch,
-            start_round=start_round)
+            start_round=start_round, planner=planner)
         if not np.array_equal(store.cursor, self._stream.counts):
+            bad = np.flatnonzero(store.cursor != self._stream.counts)
+            shown = ", ".join(str(c) for c in bad[:8])
+            more = f" (+{bad.size - 8} more)" if bad.size > 8 else ""
             raise ValueError(
                 "store per-client cursors disagree with the cohort walk at "
-                f"round {start_round} — the checkpoint was written by a "
-                "different cohort/sampler config (or rounds are missing)")
+                f"round {start_round} for client ids [{shown}]{more} — the "
+                "checkpoint was written by a different cohort/sampler/"
+                "chaos config (or rounds are missing)")
         # per-client uplink bits per round: this client's compressed slab on
         # the level it talks on (the intra-pod wire; on pod-granular NASTYA
         # meshes every client is its own pod and talks on the outer level)
@@ -133,6 +159,9 @@ class FleetRunner:
                 "store": self._store.spec(),
                 "bits_per_client_round": self._bits_per_client}
 
+    def _device_shifts(self, state):
+        return getattr(state, self._shift_field)
+
     def run(self, state, key, rounds: int,
             callback: Callable[[int, Any, dict], None] | None = None):
         """Advance `rounds` fleet rounds from `state`; returns the final
@@ -142,7 +171,8 @@ class FleetRunner:
         for _ in range(rounds):
             fr = next(self._stream)
             state = _steps.with_cohort_shifts(
-                state, store.gather(fr.cohort), self._shardings)
+                state, store.gather(fr.cohort), self._shardings,
+                self._shift_field)
             if self._slotted:
                 if not (fr.cols == fr.cols[:1]).all():
                     raise RuntimeError(
@@ -155,7 +185,8 @@ class FleetRunner:
             else:
                 state, metrics = self._jitted(state, fr.batch, key)
             if store.has_shifts:
-                store.scatter(fr.cohort, jax.device_get(state.shifts))
+                store.scatter(fr.cohort,
+                              jax.device_get(self._device_shifts(state)))
             store.advance(fr.cohort, self._local_steps)
             store.add_bits(fr.cohort, self._bits_per_client)
             if callback is not None:
@@ -170,3 +201,133 @@ class FleetRunner:
 
     def __exit__(self, *exc):
         self.close()
+
+
+class AsyncFleetRunner(FleetRunner):
+    """Buffered-async fleet rounds with deterministic fault injection
+    (DESIGN.md §3.10).
+
+    Per round an `AsyncPlanner` — a pure function of `(chaos seed, round)`
+    — decides who reports on time (the K-of-m buffer trigger), who is late
+    (staleness-discounted or dropped), who went dark, and which padded
+    ranks an elastic resize masked out. The plan becomes:
+
+      - the (m,) weights vector of the ELASTIC jitted step (build it with
+        `make_train_step(..., elastic=True)`): weight 0 masks a client out
+        of the collective mean without recompiling;
+      - the `completes` mask driving exactly-once RR accounting: only
+        completing clients scatter shifts / advance cursors / get the next
+        data positions — everyone else re-enters the cohort walk at their
+        pre-round position, shift tables untouched.
+
+    A round with zero completers skips the jitted launch entirely (the
+    server buffer never fills, so no update is applied; `state.step` does
+    not advance — deterministic, so resume stays bit-exact).
+
+    With chaos disabled and `buffer_k == m` every round is fully on-time
+    with weight exactly 1.0 per rank — bitwise the synchronous trajectory.
+    """
+
+    def __init__(self, jitted, abstract, shardings, batch_sh, *, agg, mesh,
+                 data, sampler, cohorts: CohortSampler,
+                 store: ClientStateStore, buffer_k: int | None = None,
+                 late: str = "discount", discount: float = 0.5,
+                 chaos: ChaosConfig | None = None,
+                 resize: Callable[[int], int] | None = None,
+                 local_steps: int = 1, prefetch: bool = True,
+                 start_round: int = 0):
+        if local_steps != 1:
+            raise ValueError(
+                "async/elastic fleet rounds need local_steps == 1 (the "
+                "elastic step rejects NASTYA epochs: a mid-local-epoch "
+                "straggler has no well-defined RR rewind point)")
+        self._chaos = chaos if chaos is not None else ChaosConfig()
+        planner = AsyncPlanner(num_clients(mesh), buffer_k=buffer_k,
+                               late=late, discount=discount,
+                               chaos=self._chaos, resize=resize)
+        super().__init__(jitted, abstract, shardings, batch_sh, agg=agg,
+                         mesh=mesh, data=data, sampler=sampler,
+                         cohorts=cohorts, store=store,
+                         local_steps=local_steps, prefetch=prefetch,
+                         start_round=start_round, planner=planner)
+        if self._slotted and planner.may_defer:
+            raise ValueError(
+                "per-slot methods (diana_rr) cannot run with dropout, "
+                "late='drop', or elastic resizing: a client whose cursor "
+                "rewinds falls out of lockstep with its cohort and the "
+                "shared-slot contract breaks (DESIGN.md §3.10) — use "
+                "buffered staleness discounting (late='discount') only, "
+                "or method='diana'")
+        self._planner = planner
+        if self._chaos.store_fail > 0:
+            # wrap AFTER the cursor cross-check: injection hits the round
+            # loop's gathers/scatters, not construction
+            self._store = FaultyStore(self._store, self._chaos)
+
+    def checkpoint_meta(self) -> dict:
+        return {**super().checkpoint_meta(), "async": self._planner.spec()}
+
+    def _io_retry(self, op, *args):
+        """Bounded-retry wrapper for injected transient store failures;
+        every retry is a fresh deterministic draw, backoff doubles."""
+        c = self._chaos
+        for attempt in range(c.max_retries + 1):
+            try:
+                return op(*args)
+            except TransientStoreError:
+                if attempt >= c.max_retries:
+                    raise
+                if c.backoff > 0:
+                    time.sleep(c.backoff * 2 ** attempt)
+
+    def run(self, state, key, rounds: int,
+            callback: Callable[[int, Any, dict], None] | None = None):
+        """Advance `rounds` buffered-async fleet rounds. The metrics dict
+        gains per-round participation stats (`on_time`, `completed`,
+        `dropped`, `deadline`); zero-completer rounds report
+        `{"skipped": True}` and leave the state untouched."""
+        store = self._store
+        for _ in range(rounds):
+            fr = next(self._stream)
+            plan = fr.plan
+            comp = plan.completes
+            n_comp = int(comp.sum())
+            if n_comp == 0:
+                # the buffer never fills: no server update this round, but
+                # reporters still burned uplink bits
+                if plan.reported.any():
+                    store.add_bits(fr.cohort[plan.reported],
+                                   self._bits_per_client)
+                if callback is not None:
+                    callback(fr.round, state, {"skipped": True})
+                continue
+            state = _steps.with_cohort_shifts(
+                state, self._io_retry(store.gather, fr.cohort),
+                self._shardings, self._shift_field)
+            weights = jnp.asarray(plan.weights)
+            if self._slotted:
+                slots = jnp.asarray(fr.cols[0], jnp.int32)
+                state, metrics = self._jitted(state, fr.batch, key, slots,
+                                              weights)
+            else:
+                state, metrics = self._jitted(state, fr.batch, key, weights)
+            if store.has_shifts:
+                # only completers persist their round: non-completing rows
+                # of the device table are discarded (the next gather
+                # overwrites them), leaving their store rows pre-round
+                upd = jax.device_get(self._device_shifts(state))
+                idx = np.flatnonzero(comp)
+                self._io_retry(
+                    store.scatter, fr.cohort[idx],
+                    jax.tree.map(lambda l: l[idx], upd))
+            store.advance(fr.cohort[comp], self._local_steps)
+            store.add_bits(fr.cohort[plan.reported], self._bits_per_client)
+            if callback is not None:
+                metrics = dict(metrics)
+                metrics.update(
+                    on_time=int((plan.weights >= 1.0).sum()),
+                    completed=n_comp,
+                    dropped=int(fr.cohort.size - plan.reported.sum()),
+                    deadline=float(plan.deadline))
+                callback(fr.round, state, metrics)
+        return state

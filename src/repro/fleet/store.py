@@ -93,7 +93,20 @@ class ClientStateStore:
         if rule.has_shifts:
             lead = (n_slots,) if rule.slotted else ()
             if path is not None:
-                os.makedirs(path, exist_ok=True)
+                # fail fast with a readable error instead of deep inside
+                # np.memmap when the path is unwritable (read-only mount,
+                # permission hole, a FILE where the dir should be, ...)
+                try:
+                    os.makedirs(path, exist_ok=True)
+                    probe = os.path.join(path, ".write_probe")
+                    with open(probe, "wb"):
+                        pass
+                    os.unlink(probe)
+                except OSError as e:
+                    raise OSError(
+                        f"store path {path!r} is not a writable directory "
+                        f"({e}) — pass a location the fleet driver can "
+                        "memmap shift shards under") from e
             shift_leaves = []
             for name, leaf in zip(names, leaves):
                 shards = []

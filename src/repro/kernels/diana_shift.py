@@ -5,7 +5,12 @@ The per-step elementwise hot loop the paper's method adds on top of SGD
 
     direction = H_t + Q_mean
     h'        = h   + alpha * Q_own
-    H'        = H_t + alpha * Q_mean
+    H'        = H_t + beta  * Q_mean
+
+`beta` defaults to `alpha` (the paper's full-participation form). Under
+cohort sampling only M of C clients contribute per round, so the resident
+mean shift H tracks (C/M)*h_bar unless the H update is rescaled by M/C —
+the second stepsize beta = (M/C)*alpha (DESIGN.md §3.10).
 
 Unfused this is five HBM round-trips over param-sized arrays; the kernel
 streams all four inputs once per (block, 128) VMEM tile and writes the three
@@ -24,20 +29,23 @@ _BLOCK = 512  # rows of 128 lanes per grid step -> 256 KiB/input in VMEM
 
 
 def _shift_kernel(h_ref, qo_ref, mh_ref, qm_ref, dir_ref, h_out, mh_out, *,
-                  alpha: float):
+                  alpha: float, beta: float):
     h = h_ref[...].astype(jnp.float32)
     qo = qo_ref[...].astype(jnp.float32)
     mh = mh_ref[...].astype(jnp.float32)
     qm = qm_ref[...].astype(jnp.float32)
     dir_ref[...] = (mh + qm).astype(dir_ref.dtype)
     h_out[...] = (h + alpha * qo).astype(h_out.dtype)
-    mh_out[...] = (mh + alpha * qm).astype(mh_out.dtype)
+    mh_out[...] = (mh + beta * qm).astype(mh_out.dtype)
 
 
-@partial(jax.jit, static_argnames=("alpha", "interpret"))
+@partial(jax.jit, static_argnames=("alpha", "beta", "interpret"))
 def diana_shift_update(h, q_own, mh, q_mean, *, alpha: float,
+                       beta: float | None = None,
                        interpret: bool | None = None):
     """All inputs (N,) with N % LANES == 0. Returns (direction, h', H')."""
+    if beta is None:
+        beta = alpha
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = h.shape[0]
@@ -48,7 +56,7 @@ def diana_shift_update(h, q_own, mh, q_mean, *, alpha: float,
     spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
     view = lambda x: x.reshape(rows, LANES)
     direction, h_new, mh_new = pl.pallas_call(
-        partial(_shift_kernel, alpha=alpha),
+        partial(_shift_kernel, alpha=alpha, beta=beta),
         grid=grid,
         in_specs=[spec] * 4,
         out_specs=[spec] * 3,

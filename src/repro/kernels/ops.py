@@ -32,7 +32,8 @@ def qsgd(x: jax.Array, key: jax.Array, *, levels: int = 8) -> jax.Array:
     return out[:n].reshape(x.shape)
 
 
-def diana_shift(h, q_own, mh, q_mean, *, alpha: float):
+def diana_shift(h, q_own, mh, q_mean, *, alpha: float,
+                beta: float | None = None):
     """Fused DIANA update on arbitrary-shape tensors (same shape each).
 
     Returns (direction, h', H') — see kernels/diana_shift.py.
@@ -44,7 +45,7 @@ def diana_shift(h, q_own, mh, q_mean, *, alpha: float):
     for t in flats:
         p, _ = _pad_to(t, LANES)
         padded.append(p)
-    d, hn, mhn = _shift_raw(*padded, alpha=alpha)
+    d, hn, mhn = _shift_raw(*padded, alpha=alpha, beta=beta)
     return (d[:n].reshape(shape), hn[:n].reshape(shape), mhn[:n].reshape(shape))
 
 

@@ -68,16 +68,21 @@ def randk_mask_ref(x: jax.Array, starts: jax.Array, *, d: int, k: int) -> jax.Ar
     return jnp.where(inside, x.astype(jnp.float32) * (d / k), 0.0).astype(x.dtype)
 
 
-def diana_shift_update_ref(h, q_own, mh, q_mean, alpha: float):
+def diana_shift_update_ref(h, q_own, mh, q_mean, alpha: float,
+                           beta: float | None = None):
     """Fused DIANA state update (Algorithm 3/5 lines 7-11):
         direction = H_t + Q_mean
         h'        = h  + alpha * Q_own
-        H'        = H_t + alpha * Q_mean
+        H'        = H_t + beta  * Q_mean
+    `beta` defaults to alpha; under cohort sampling the caller passes
+    beta = (M/C)*alpha so H tracks the population mean shift.
     Returns (direction, h', H'). All f32 math, cast back to input dtypes.
     """
     f = jnp.float32
+    if beta is None:
+        beta = alpha
     direction = mh.astype(f) + q_mean.astype(f)
     h_new = h.astype(f) + alpha * q_own.astype(f)
-    mh_new = mh.astype(f) + alpha * q_mean.astype(f)
+    mh_new = mh.astype(f) + beta * q_mean.astype(f)
     return (direction.astype(q_mean.dtype), h_new.astype(h.dtype),
             mh_new.astype(mh.dtype))

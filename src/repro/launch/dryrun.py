@@ -48,24 +48,27 @@ from repro.models import transformer
 
 def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
                  ce: str = "gather", seq_shard: bool = True,
-                 local_steps: int = 1):
+                 local_steps: int = 1, elastic: bool = False):
     """Lower + compile the step this shape exercises for config `cfg`."""
     specs = input_specs(cfg, shape)
     if shape.kind == "train":
         jitted, abstract, shardings, _ = steps.make_train_step(
             cfg, mesh, agg=agg, remat=remat, unroll=unroll, ce=ce,
-            seq_shard=seq_shard, local_steps=local_steps
+            seq_shard=seq_shard, local_steps=local_steps, elastic=elastic
         )
         # the batch contract of data.pipeline.make_batch_stream: client-major
         # m * local_steps * b rows on every leaf
         batch = abstract_stream_batch(specs["batch"], local_steps)
         key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+        # the buffered-async wire weights vector (elastic step only)
+        extra = ((jax.ShapeDtypeStruct((num_clients(mesh),), jnp.float32),)
+                 if elastic else ())
         with compat.set_mesh(mesh):
             if agg.rule.slotted:  # per-slot methods take the slot vector
                 slots = jax.ShapeDtypeStruct((local_steps,), jnp.int32)
-                lowered = jitted.lower(abstract, batch, key, slots)
+                lowered = jitted.lower(abstract, batch, key, slots, *extra)
             else:
-                lowered = jitted.lower(abstract, batch, key)
+                lowered = jitted.lower(abstract, batch, key, *extra)
     elif shape.kind == "prefill":
         prefill, lower_args = steps.make_prefill_step(
             cfg, mesh, cache_len=shape.seq_len, remat=remat, unroll=unroll
@@ -95,7 +98,9 @@ def _probe_cfg(cfg, k: int):
     return dataclasses.replace(cfg, **changes)
 
 
-def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1):
+def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1,
+                buffer_k: int | None = None, chaos_dropout: float = 0.0,
+                chaos_seed: int = 0):
     """Fleet sizing at population scale C — NO population-sized allocation.
 
     Proves, next to the compiled step, that the fleet layer scales: the
@@ -135,11 +140,29 @@ def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1):
     store_bytes = ClientStateStore.estimate_nbytes(
         abstract.params, clients, agg_c.rule, n_slots=agg_c.n_slots,
         dtype=agg_c.shift_dtype)
-    return {"population": clients, "cohort": m,
-            "cohort_mode": "rr",
-            "rounds_per_fleet_epoch": clients / m,
-            "device_shift_bytes": device_shift_bytes,
-            "store_bytes": store_bytes}
+    out = {"population": clients, "cohort": m,
+           "cohort_mode": "rr",
+           "rounds_per_fleet_epoch": clients / m,
+           "device_shift_bytes": device_shift_bytes,
+           "store_bytes": store_bytes}
+    if buffer_k is not None or chaos_dropout > 0:
+        # host-side buffered-async planning at population scale: the
+        # planner is O(cohort) per round no matter how big C is, and the
+        # probe shows how many completers the K-of-m trigger keeps
+        from repro.fleet import AsyncPlanner, ChaosConfig
+
+        planner = AsyncPlanner(
+            m, buffer_k=buffer_k,
+            chaos=ChaosConfig(dropout=chaos_dropout, seed=chaos_seed))
+        probed = [planner(r, cohorts.cohort_for_round(r))
+                  for r in range(16)]
+        done = [int(p.completes.sum()) for p in probed]
+        out["async"] = {"buffer_k": planner.buffer_k,
+                        "chaos_dropout": chaos_dropout,
+                        "rounds_probed": len(probed),
+                        "mean_completers": float(np.mean(done)),
+                        "min_completers": int(min(done))}
+    return out
 
 
 def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
@@ -147,6 +170,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                fraction: float = 0.02, remat="full", ce: str = "gather",
                seq_shard: bool = True, probes: bool = True,
                local_steps: int = 1, clients: int | None = None,
+               buffer_k: int | None = None, chaos_dropout: float = 0.0,
                extra_tags: dict | None = None):
     """Lower + compile one (arch, shape, mesh). Returns a result dict.
 
@@ -176,12 +200,16 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                                 n_slots=8 if agg_method == "diana_rr" else 1)
     n_dev = mesh.devices.size
 
+    # buffered-async knobs compile the ELASTIC step (trailing per-rank
+    # weights vector) — the variant AsyncFleetRunner drives
+    elastic = buffer_k is not None or chaos_dropout > 0
+
     # 1) full-depth scan compile: the dry-run proper + memory analysis
     t0 = time.time()
     flags.set_unroll_inner_scans(False)
     compiled_full = _compile_one(cfg, shape, mesh, agg, remat=remat,
                                  unroll=False, ce=ce, seq_shard=seq_shard,
-                                 local_steps=local_steps)
+                                 local_steps=local_steps, elastic=elastic)
     t_full = time.time() - t0
     mem = memory_summary(compiled_full)
     roof_scan = roofline_from_compiled(compiled_full, n_dev)
@@ -198,6 +226,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
         "ce": ce,
         "seq_shard": seq_shard,
         "local_steps": local_steps,
+        "elastic": elastic,
         "compile_s": round(t_full, 1),
         "memory": mem,
         "roofline_scan_raw": roof_scan.as_dict(),
@@ -206,7 +235,9 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
     }
     if clients is not None and shape.kind == "train":
         result["fleet"] = fleet_smoke(cfg, mesh, agg, clients,
-                                      local_steps=local_steps)
+                                      local_steps=local_steps,
+                                      buffer_k=buffer_k,
+                                      chaos_dropout=chaos_dropout)
 
     # 2) depth probes (unrolled) -> affine extrapolation of cost terms
     if probes:
@@ -218,7 +249,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 ck = _compile_one(_probe_cfg(cfg, k), shape, mesh, agg,
                                   remat=remat, unroll=True, ce=ce,
                                   seq_shard=seq_shard,
-                                  local_steps=local_steps)
+                                  local_steps=local_steps, elastic=elastic)
                 probes_raw[k] = roofline_from_compiled(ck, n_dev)
                 result.setdefault("top_collectives", {})[k] = [
                     (f"{b:.3e}", kind, shp)
@@ -271,6 +302,13 @@ def main(argv=None):
                          "state-store sizing next to the compile and assert "
                          "device shift memory stays O(cohort) — DESIGN.md "
                          "§3.9 (train shapes only)")
+    ap.add_argument("--buffer-k", type=int, default=None,
+                    help="compile the buffered-async ELASTIC step and probe "
+                         "the K-of-m participation plan host-side "
+                         "(DESIGN.md §3.10; train shapes with --clients)")
+    ap.add_argument("--chaos-dropout", type=float, default=0.0,
+                    help="per-round client dropout probability for the "
+                         "async participation probe")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the unrolled depth probes (report raw scan "
                          "cost terms, which count loop bodies once)")
@@ -293,7 +331,8 @@ def main(argv=None):
                     agg_wire=args.wire, fraction=args.fraction,
                     remat=args.remat, ce=args.ce, seq_shard=args.seq_shard,
                     probes=not args.no_probes, local_steps=args.local_steps,
-                    clients=args.clients,
+                    clients=args.clients, buffer_k=args.buffer_k,
+                    chaos_dropout=args.chaos_dropout,
                     extra_tags={"tag": args.tag} if args.tag else None,
                 )
             except Exception as e:  # a dry-run failure is a sharding bug

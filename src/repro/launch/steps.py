@@ -209,8 +209,8 @@ def train_state_shardings(mesh, state: TrainState, agg) -> TrainState:
     )
 
 
-def with_cohort_shifts(state: TrainState, host_shifts, shardings: TrainState
-                       ) -> TrainState:
+def with_cohort_shifts(state: TrainState, host_shifts, shardings: TrainState,
+                       field: str = "shifts") -> TrainState:
     """Swap cohort-gathered shift slices into a TrainState (fleet path).
 
     The train step never assumes `shifts` belongs to mesh-resident clients —
@@ -218,14 +218,19 @@ def with_cohort_shifts(state: TrainState, host_shifts, shardings: TrainState
     is handed. Under partial participation (`repro.fleet.FleetRunner`) that
     slice is the round's cohort, gathered from the host
     `ClientStateStore` and placed onto the step's shift shardings here;
-    after the step the runner scatters `state.shifts` back. `host_shifts`
+    after the step the runner scatters the field back. `host_shifts`
     is None for memory-free methods ('q'/'dense') — the state passes
     through untouched. Device memory stays O(cohort), never O(population).
+
+    `field` selects which table holds the per-client state: "shifts" when
+    the mesh's client ranks are the inner wire level, "pod_shifts" on flat
+    NASTYA meshes (`configure_agg` with `client_axes=()` maps each client to
+    its own pod, so the per-client DIANA state lives in the outer tables).
     """
     if host_shifts is None:
         return state
     return state._replace(
-        shifts=jax.device_put(host_shifts, shardings.shifts))
+        **{field: jax.device_put(host_shifts, getattr(shardings, field))})
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +241,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                     lr: float = 3e-3, eta: float | None = None,
                     local_steps: int = 1, remat="full", unroll: bool = False,
                     ce: str = "gather", seq_shard: bool = True,
-                    optimizer: str = "sgd"):
+                    optimizer: str = "sgd", elastic: bool = False):
     """Returns jitted (state, batch, key) -> (state, metrics).
 
     lr: the client/local stepsize gamma. With `local_steps == 1` it is also
@@ -260,11 +265,24 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     optimizer: the SERVER update applied to the aggregated direction —
     "sgd" is the paper's Algorithms 2-5; "momentum"/"adamw" are the
     beyond-paper variants (state replicated over clients, TP over model).
+
+    elastic: the step takes a trailing (m,) f32 `weights` vector — each
+    client rank's participation weight, pre-normalized by the host so an
+    all-ones cohort is exactly 1.0 everywhere (x * 1.0 is a bitwise no-op,
+    so full participation matches the non-elastic step bit-for-bit). The
+    async fleet driver (repro.fleet, DESIGN.md §3.10) uses weight 0 to mask
+    dropped/padded clients and fractional weights to discount stale
+    reports; the cohort can shrink/grow between rounds without recompiling.
     """
     if eta is not None and local_steps == 1:
         raise ValueError("eta is the NASTYA server stepsize and requires "
                          "local_steps > 1 (with one local step the server "
                          "stepsize IS lr; Algorithms 2-3)")
+    if elastic and local_steps > 1:
+        raise ValueError(
+            "elastic=True requires local_steps == 1: a NASTYA epoch "
+            "consumes a full local mini-epoch per client, so a mid-epoch "
+            "straggler has no well-defined RR rewind point")
     mcaxes = _client_axes(mesh)
     m = num_clients(mesh)
     agg = configure_agg(agg, mesh, local_steps)
@@ -342,24 +360,43 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     # -- wire regions (fully-manual shard_map bodies) --------------------------
 
     def full_wire_fn(g, shifts, mean_shift, pod_shifts, pod_mean_shift, kd,
-                     slot):
-        """Composed two-level exchange (the local_steps == 1 round)."""
+                     slot, w=None):
+        """Composed two-level exchange (the local_steps == 1 round).
+
+        `w` is this rank's (1,)-block of the elastic weights vector (spec
+        P(mcaxes): one scalar per client rank), or None on the non-elastic
+        path — the two variants compile to different graphs but the weight
+        only ever scales the compressed message into the collective mean."""
         g = strip(g)
         dstate = DianaState(strip(shifts), strip_pod(mean_shift),
                             strip_pod(pod_shifts), pod_mean_shift) \
             if stateful else None
         direction, nd = agg.aggregate(g, dstate,
-                                      jax.random.wrap_key_data(kd), slot=slot)
+                                      jax.random.wrap_key_data(kd), slot=slot,
+                                      weight=None if w is None else w[0])
         if stateful:
             return (direction, stack(nd.shifts), stack_pod(nd.mean_shift),
                     stack_pod(nd.pod_shifts), nd.pod_mean_shift)
         return direction, shifts, mean_shift, pod_shifts, pod_mean_shift
 
-    full_wire = manual(
-        full_wire_fn,
-        in_specs=(stacked_specs, shifts_sp, ms_sp, psh_sp, pms_sp, P(), P()),
-        out_specs=(pspecs, shifts_sp, ms_sp, psh_sp, pms_sp),
-    )
+    wire_out_specs = (pspecs, shifts_sp, ms_sp, psh_sp, pms_sp)
+    if elastic:
+        full_wire = manual(
+            full_wire_fn,
+            in_specs=(stacked_specs, shifts_sp, ms_sp, psh_sp, pms_sp, P(),
+                      P(), P(mcaxes)),
+            out_specs=wire_out_specs,
+        )
+    else:
+        _full_wire = manual(
+            lambda g, sh, ms, psh, pms, kd, slot: full_wire_fn(
+                g, sh, ms, psh, pms, kd, slot),
+            in_specs=(stacked_specs, shifts_sp, ms_sp, psh_sp, pms_sp, P(),
+                      P()),
+            out_specs=wire_out_specs,
+        )
+        full_wire = lambda g, sh, ms, psh, pms, kd, slot, w: _full_wire(
+            g, sh, ms, psh, pms, kd, slot)
 
     def local_wire_fn(g, shifts, mean_shift, kd, slot):
         """Inner (intra-pod) exchange — one NASTYA local step's psum.
@@ -473,7 +510,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         return (direction, new_shifts, new_ms, new_psh, new_pms,
                 jnp.mean(losses), gnorm)
 
-    def flat_round(state: TrainState, batch, rkey, slots):
+    def flat_round(state: TrainState, batch, rkey, slots, weights):
         """One communication round (Algorithms 2-3 / the composed wire)."""
         bsz = jax.tree.leaves(batch)[0].shape[0] // m
         batch_c = jax.tree.map(
@@ -481,7 +518,8 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         losses, g = grads_and_loss(broadcast_clients(state.params), batch_c)
         direction, new_shifts, new_ms, new_psh, new_pms = full_wire(
             g, state.shifts, state.mean_shift, state.pod_shifts,
-            state.pod_mean_shift, jax.random.key_data(rkey), slots[0])
+            state.pod_mean_shift, jax.random.key_data(rkey), slots[0],
+            weights)
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(x.astype(jnp.float32)))
             for x in jax.tree.leaves(g)) / m)
@@ -507,7 +545,7 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                 "client-major (m * local_steps * b)-row batches; feed it "
                 "with data.pipeline.make_batch_stream")
 
-    def step(state: TrainState, batch, key, slots):
+    def step(state: TrainState, batch, key, slots, weights=None):
         check_batch(batch)
         if slots is None:
             slots = jnp.zeros((local_steps,), jnp.int32)
@@ -517,10 +555,21 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                 f"slots must be a ({local_steps},) int32 vector of shared "
                 f"batch indices (one per local micro-step), got "
                 f"{slots.shape} — see data.pipeline.shared_slots_for_step")
+        if elastic:
+            weights = jnp.asarray(weights, jnp.float32)
+            if weights.shape != (m,):
+                raise ValueError(
+                    f"elastic weights must be an ({m},) f32 vector (one "
+                    f"participation weight per client rank), got "
+                    f"{weights.shape}")
         rkey = jax.random.fold_in(key, state.step)
-        round_fn = nastya_epoch if local_steps > 1 else flat_round
-        (direction, new_shifts, new_ms, new_psh, new_pms, loss,
-         gnorm) = round_fn(state, batch, rkey, slots)
+        if local_steps > 1:
+            (direction, new_shifts, new_ms, new_psh, new_pms, loss,
+             gnorm) = nastya_epoch(state, batch, rkey, slots)
+        else:
+            (direction, new_shifts, new_ms, new_psh, new_pms, loss,
+             gnorm) = flat_round(state, batch, rkey, slots,
+                                 weights if elastic else None)
         updates, new_opt = opt.update(
             jax.tree.map(lambda d: d.astype(jnp.float32), direction),
             state.opt_state, state.params)
@@ -533,11 +582,26 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     batch_sh = lambda batch: jax.tree.map(
         lambda x: NamedSharding(mesh, P(mcaxes, *(None,) * (x.ndim - 1))),
         batch)
-    if slotted:
-        # per-slot methods take the round's shared slot vector as a fourth
-        # argument; slot-free methods keep the 3-arg signature unchanged
+    # signature grows right-to-left: per-slot methods append the round's
+    # shared slot vector, elastic steps append the (m,) weights vector last
+    if slotted and elastic:
         jitted = jax.jit(
             step,
+            in_shardings=(shardings, None, None, None, None),
+            out_shardings=(shardings, None),
+            donate_argnums=(0,),
+        )
+    elif slotted:
+        jitted = jax.jit(
+            lambda state, batch, key, slots: step(state, batch, key, slots),
+            in_shardings=(shardings, None, None, None),
+            out_shardings=(shardings, None),
+            donate_argnums=(0,),
+        )
+    elif elastic:
+        jitted = jax.jit(
+            lambda state, batch, key, weights: step(state, batch, key, None,
+                                                    weights),
             in_shardings=(shardings, None, None, None),
             out_shardings=(shardings, None),
             donate_argnums=(0,),

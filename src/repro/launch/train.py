@@ -45,7 +45,16 @@ from repro.core.dist import CompressedAggregation
 from repro.data.pipeline import make_batch_stream, shared_slots_for_step
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
-from repro.fleet import COHORT_MODES, CohortSampler, ClientStateStore, FleetRunner
+from repro.fleet import (
+    COHORT_MODES,
+    LATE_POLICIES,
+    AsyncFleetRunner,
+    AsyncPlanner,
+    ChaosConfig,
+    CohortSampler,
+    ClientStateStore,
+    FleetRunner,
+)
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh, make_test_mesh, num_clients
 
@@ -69,6 +78,25 @@ def stub_modalities(cfg, m: int, n_batches: int, b: int, *, seed: int = 0):
             size=(m, n_batches, b, cfg.encoder_seq, cfg.d_model)
         ).astype(cfg.dtype)
     return extras
+
+
+def chaos_from_args(args) -> ChaosConfig:
+    """The --chaos-* CLI surface -> one deterministic fault config."""
+    return ChaosConfig(
+        dropout=args.chaos_dropout, straggler=args.chaos_straggler,
+        delay=args.chaos_delay, store_fail=args.chaos_store_fail,
+        max_retries=args.chaos_retries, backoff=args.chaos_backoff,
+        seed=args.chaos_seed)
+
+
+def fleet_is_async(args) -> bool:
+    """Buffered-async mode turns on when any async/chaos knob is set; a
+    plain --clients run keeps the synchronous driver (and its compiled
+    step) byte-identical to before."""
+    chaos = chaos_from_args(args)
+    return (args.buffer_k is not None or args.late == "drop"
+            or chaos.dropout > 0 or chaos.straggler > 0
+            or chaos.store_fail > 0)
 
 
 def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
@@ -100,6 +128,12 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
           + (f"mmap@{args.store_path}" if args.store_path else "host RAM")
           + " / O(cohort) device")
 
+    use_async = fleet_is_async(args)
+    chaos = chaos_from_args(args)
+    async_spec = AsyncPlanner(
+        m, buffer_k=args.buffer_k, late=args.late, discount=args.discount,
+        chaos=chaos).spec() if use_async else None
+
     start_round = 0
     if args.resume:
         meta = load_meta(args.resume)
@@ -114,6 +148,13 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 f"{args.resume}: checkpointed fleet walk {fm} does not "
                 "match this run's samplers/local_steps — refusing to "
                 "resume onto a different cohort walk")
+        if fm.get("async") != async_spec:
+            raise SystemExit(
+                f"{args.resume}: checkpointed async/chaos plan "
+                f"{fm.get('async')} does not match this run's "
+                f"{async_spec} — the participation schedule is part of "
+                "the walk; resume with the same --buffer-k/--late/"
+                "--chaos-* flags")
         start_round = fm["round"]
 
     key = jax.random.key(1)
@@ -130,18 +171,35 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                                        optimizer=args.optimizer, mesh=mesh,
                                        local_steps=args.local_steps),
                 shardings)
-        runner = FleetRunner(
-            jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
-            data=data, sampler=sampler, cohorts=cohorts, store=store,
-            local_steps=args.local_steps, prefetch=args.prefetch,
-            start_round=start_round)
+        if use_async:
+            runner = AsyncFleetRunner(
+                jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
+                data=data, sampler=sampler, cohorts=cohorts, store=store,
+                buffer_k=args.buffer_k, late=args.late,
+                discount=args.discount, chaos=chaos,
+                local_steps=args.local_steps, prefetch=args.prefetch,
+                start_round=start_round)
+            print(f"async: buffer K={runner._planner.buffer_k}/{m} "
+                  f"late={args.late} chaos={chaos.spec()}")
+        else:
+            runner = FleetRunner(
+                jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
+                data=data, sampler=sampler, cohorts=cohorts, store=store,
+                local_steps=args.local_steps, prefetch=args.prefetch,
+                start_round=start_round)
 
         def log(t, _state, metrics):
             if t % args.log_every == 0 or t == args.steps - 1:
+                if metrics.get("skipped"):
+                    print(f"round {t:5d} | skipped (buffer never filled)",
+                          flush=True)
+                    return
+                part = (f" | done {metrics['completed']}/{m}"
+                        if "completed" in metrics else "")
                 print(f"round {t:5d} | loss {float(metrics['loss']):8.4f} | "
                       f"gnorm {float(metrics['grad_norm']):9.3f} | "
-                      f"{(time.time()-t0)/(t-start_round+1):6.2f}s/round",
-                      flush=True)
+                      f"{(time.time()-t0)/(t-start_round+1):6.2f}s/round"
+                      + part, flush=True)
 
         with runner:
             state = runner.run(state, key, args.steps - start_round,
@@ -196,6 +254,33 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--cohort-mode", choices=COHORT_MODES, default="rr",
                     help="'rr' = cohort-RR (every client once per fleet "
                          "epoch); 'with_replacement' = i.i.d. baseline")
+    ap.add_argument("--buffer-k", type=int, default=None,
+                    help="buffered-async trigger: apply the server update "
+                         "once K of the cohort's reports arrive "
+                         "(DESIGN.md §3.10); default = synchronous rounds")
+    ap.add_argument("--late", choices=LATE_POLICIES, default="discount",
+                    help="late reports past the K-of-m deadline: "
+                         "'discount' folds them in with weight "
+                         "discount/(1+staleness); 'drop' discards them and "
+                         "rewinds their RR data cursor (exactly-once)")
+    ap.add_argument("--discount", type=float, default=0.5,
+                    help="staleness-discount numerator for --late discount")
+    ap.add_argument("--chaos-dropout", type=float, default=0.0,
+                    help="P(a cohort client goes dark for the round) — "
+                         "deterministic per (--chaos-seed, round)")
+    ap.add_argument("--chaos-straggler", type=float, default=0.0,
+                    help="P(an alive client reports after the deadline)")
+    ap.add_argument("--chaos-delay", type=float, default=1.0,
+                    help="mean extra straggler latency (base-round units)")
+    ap.add_argument("--chaos-store-fail", type=float, default=0.0,
+                    help="P(a store gather/scatter raises a transient "
+                         "error); the driver retries with backoff")
+    ap.add_argument("--chaos-retries", type=int, default=3,
+                    help="bounded retry budget per store op")
+    ap.add_argument("--chaos-backoff", type=float, default=0.0,
+                    help="base seconds for exponential retry backoff")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed every fault draw derives from")
     ap.add_argument("--store-path", default=None,
                     help="back the fleet client-state store with np.memmap "
                          "shards under this directory (zero pages cost "
@@ -246,22 +331,28 @@ def main():
             ap.error("--agg diana_rr on the fleet path needs --cohort-mode "
                      "rr and --clients divisible by the mesh client count "
                      "(shared-slot wire contract, DESIGN.md §3.9)")
-        if args.local_steps > 1 and "pod" not in mesh.axis_names and \
-                args.agg in ("diana", "diana_rr", "ef"):
-            ap.error("--clients with --local-steps>1 needs a pod mesh "
-                     "(--pods>1 or --multi-pod): flat-mesh NASTYA makes "
-                     "every client its own pod, so per-client shifts land "
-                     "in pod_shifts — not round-tripped by the fleet store "
-                     "(ROADMAP open item)")
+        if fleet_is_async(args) and args.local_steps > 1:
+            ap.error("--buffer-k/--chaos-* need --local-steps 1: a NASTYA "
+                     "epoch has no well-defined RR rewind point for a "
+                     "mid-epoch straggler (DESIGN.md §3.10)")
+    elif fleet_is_async(args):
+        ap.error("--buffer-k/--late drop/--chaos-* are fleet knobs — pass "
+                 "--clients C to run partial participation")
+    # cohort-sampled fleets rescale the DIANA mean-shift update by M/C so
+    # the server's resident mean shift tracks the population mean h_bar
+    # rather than a (C/M)-inflated cohort estimate (DESIGN.md §3.10);
+    # M == C gives 1.0, the exact full-participation form
+    mean_scale = m / args.clients if args.clients is not None else 1.0
     agg = CompressedAggregation(method=args.agg, wire=args.wire,
                                 fraction=args.fraction,
                                 n_slots=n_batches if slotted else 1,
+                                mean_scale=mean_scale,
                                 shift_dtype=jnp.float32)
     remat = "full" if args.production_mesh else False
     jitted, abstract, shardings, batch_sh = steps.make_train_step(
         cfg, mesh, agg=agg, lr=args.lr, eta=args.eta,
         local_steps=args.local_steps, remat=remat,
-        optimizer=args.optimizer)
+        optimizer=args.optimizer, elastic=fleet_is_async(args))
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
     print(f"arch={cfg.name} ({n_params/1e6:.1f}M params) clients={m} "
           f"agg={args.agg}/{args.wire} k/d={args.fraction} "

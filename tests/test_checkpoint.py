@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import load_pytree, restore_train_state, save_pytree
+from repro.checkpoint import (CheckpointError, load_meta, load_pytree,
+                              restore_train_state, save_pytree)
 from repro.configs import get_config, reduced
 from repro.core.dist import CompressedAggregation
 from repro.launch import steps
@@ -33,6 +34,39 @@ def test_missing_leaf_raises(tmp_path):
     save_pytree(p, {"a": jnp.ones(3)})
     with pytest.raises(KeyError):
         load_pytree(p, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_truncated_checkpoint_raises_checkpoint_error(tmp_path):
+    """A checkpoint cut short mid-write (power loss around the atomic
+    rename, a partial download) must surface as CheckpointError naming the
+    file — not as a raw msgpack/json/numpy decode traceback."""
+    tree = {"a": jnp.arange(64, dtype=jnp.float32),
+            "b": jnp.ones((8, 8), jnp.bfloat16)}
+    p = str(tmp_path / "ck.msgpack")
+    save_pytree(p, tree, step=3)
+    blob = open(p, "rb").read()
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    # truncate at several depths: inside the buffers, inside the manifest,
+    # and a nearly-empty file — every cut decodes to the same typed error
+    for frac in (0.6, 0.25, 0.02):
+        with open(p, "wb") as f:
+            f.write(blob[:max(1, int(len(blob) * frac))])
+        with pytest.raises(CheckpointError, match="truncated or corrupt"):
+            load_pytree(p, like)
+    # garbage that isn't msgpack at all: load_meta is the first resume
+    # touchpoint and must fail readably too
+    with open(p, "wb") as f:
+        f.write(b"\x00not a checkpoint\xff" * 7)
+    with pytest.raises(CheckpointError):
+        load_meta(p)
+    # an intact non-checkpoint msgpack map: readable "no manifest" error
+    import msgpack
+
+    with open(p, "wb") as f:
+        f.write(msgpack.packb({"something": "else"}))
+    with pytest.raises(CheckpointError, match="no manifest"):
+        load_meta(p)
 
 
 @pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")

@@ -17,7 +17,9 @@ import pytest
 
 from repro.data.pipeline import CohortStream, make_batch_stream
 from repro.data.reshuffle import ReshuffleSampler
-from repro.fleet import CohortSampler, ClientStateStore, FleetRunner
+from repro.fleet import (AsyncFleetRunner, AsyncPlanner, ChaosConfig,
+                         CohortSampler, ClientStateStore, FaultyStore,
+                         FleetRunner, TransientStoreError)
 
 needs_mesh = pytest.mark.skipif(
     jax.device_count() < 8, reason="needs 8 forced host devices"
@@ -171,6 +173,18 @@ def test_store_memmap_backing(tmp_path):
     got = store.gather(cohort)
     assert np.array_equal(got["w"], upd["w"])
     assert len(list(tmp_path.iterdir())) == 2 * 3  # 2 leaves x 3 shards
+
+
+def test_store_unwritable_path_fails_readably(tmp_path):
+    """--store-path pointing at a non-directory (or an unwritable mount)
+    fails up front with an actionable message, not deep inside np.memmap."""
+    from repro.core.rules import get_rule
+
+    not_a_dir = tmp_path / "occupied"
+    not_a_dir.write_bytes(b"x")
+    with pytest.raises(OSError, match="not a writable directory"):
+        ClientStateStore.create(_params(), 4, get_rule("single"),
+                                path=str(not_a_dir))
 
 
 def test_store_rejects_bad_cohorts():
@@ -353,7 +367,8 @@ def _tiny_cfg():
     return dataclasses.replace(cfg, dtype=jnp.float32)
 
 
-def _fleet_setup(mesh, method, *, n=3):
+def _fleet_setup(mesh, method, *, n=3, elastic=False, local_steps=1,
+                 mean_scale=1.0):
     from repro.core.dist import CompressedAggregation
     from repro.launch import steps
     from repro.launch.mesh import num_clients
@@ -363,9 +378,11 @@ def _fleet_setup(mesh, method, *, n=3):
     slotted = method == "diana_rr"
     agg = CompressedAggregation(method=method, wire="shared", fraction=0.5,
                                 n_slots=n if slotted else 1,
-                                shift_dtype=jnp.float32)
+                                shift_dtype=jnp.float32,
+                                mean_scale=mean_scale)
     jitted, abstract, shardings, batch_sh = steps.make_train_step(
-        cfg, mesh, agg=agg, lr=0.05, remat=False, seq_shard=False)
+        cfg, mesh, agg=agg, lr=0.05, remat=False, seq_shard=False,
+        elastic=elastic, local_steps=local_steps)
     return cfg, m, agg, jitted, abstract, shardings, batch_sh
 
 
@@ -565,9 +582,13 @@ def test_fleet_partial_participation_trains_and_isolates_state(mesh_4x2):
     # device shift tables are cohort-sized, not population-sized
     for leaf in jax.tree.leaves(abstract.shifts):
         assert leaf.shape[0] == m
-    # a store whose cursors disagree with the walk is rejected at resume
+    # a store whose cursors disagree with the walk is rejected at resume,
+    # and the error names the offending client ids (satellite: debuggable
+    # cursor mismatches)
     store.advance(np.array([0]), 1)
-    with pytest.raises(ValueError, match="disagree with the cohort walk"):
+    with pytest.raises(ValueError,
+                       match=r"disagree with the cohort walk at round 2 "
+                             r"for client ids \[0\]"):
         FleetRunner(jitted, abstract, shardings, batch_sh, agg=agg,
                     mesh=mesh, data=data, sampler=sampler, cohorts=cohorts,
                     store=store, start_round=total)
@@ -601,9 +622,450 @@ def test_fleet_slotted_gates(mesh_4x2):
             mk(10, "rr", "rr_shared")
         with pytest.raises(ValueError, match="rr_shared"):
             mk(8, "rr", "rr")
-        # flat-mesh NASTYA: per-client shifts land in pod_shifts, which
-        # the store does not round-trip — rejected before the slot gates
-        with pytest.raises(ValueError, match="pod_shifts"):
+        # flat-mesh NASTYA collapses the outer slot tables to one row
+        # (the inter-pod wire carries the slot-free epoch gradient), so a
+        # 3-slot store no longer matches the wire's table layout
+        with pytest.raises(ValueError, match="store n_slots=3"):
             mk(8, "rr", "rr_shared", ls=2)
         runner = mk(8, "rr", "rr_shared")  # valid: 8 % 4 == 0
         runner.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos: deterministic fault injection + buffered-async round planning
+# ---------------------------------------------------------------------------
+
+def test_async_planner_clean_run_is_exactly_synchronous():
+    """No chaos, buffer_k == m: everyone on time, weight EXACTLY 1.0 per
+    rank (the elastic step's bitwise no-op), everyone completes/reports —
+    and the plan is a pure function of (seed, round)."""
+    p = AsyncPlanner(6)
+    cohort = np.arange(6)
+    for rnd in range(4):
+        plan = p(rnd, cohort)
+        assert (plan.weights == np.float32(1.0)).all()
+        assert plan.completes.all() and plan.reported.all()
+        assert np.isfinite(plan.deadline)
+    q = AsyncPlanner(6)
+    for rnd in range(4):
+        a, b = p(rnd, cohort), q(rnd, cohort)
+        assert np.array_equal(a.weights, b.weights)
+        assert np.array_equal(a.completes, b.completes)
+        assert np.array_equal(a.latency, b.latency)
+
+
+def test_async_planner_k_of_m_late_policies():
+    """buffer_k=2 of m=4 with stragglers: under 'drop' the late reports
+    get weight 0 and never complete (but still burn uplink bits — reported
+    stays True); under 'discount' everyone alive completes with a
+    staleness-damped weight; both normalize so sum(weights) == m."""
+    m = 4
+    chaos = ChaosConfig(straggler=0.5, delay=2.0, seed=7)
+    cohort = np.arange(m)
+    drop = AsyncPlanner(m, buffer_k=2, late="drop", chaos=chaos)
+    disc = AsyncPlanner(m, buffer_k=2, late="discount", discount=0.5,
+                        chaos=chaos)
+    saw_dropped_late = False
+    for rnd in range(12):
+        pd, pc = drop(rnd, cohort), disc(rnd, cohort)
+        # same latency stream (same chaos seed), different fold-in policy
+        assert np.array_equal(pd.latency, pc.latency)
+        assert pd.deadline == pc.deadline
+        assert np.array_equal(pd.completes, pd.weights > 0)
+        assert pd.reported.all(), "no dropout: everyone transmits"
+        assert pc.completes.all(), "discount folds every alive report in"
+        saw_dropped_late |= bool((pd.reported & ~pd.completes).any())
+        np.testing.assert_allclose(pd.weights.sum(), m, rtol=1e-6)
+        np.testing.assert_allclose(pc.weights.sum(), m, rtol=1e-6)
+        on_time = pc.latency <= pc.deadline
+        assert (pc.weights[on_time] >= pc.weights.max() - 1e-6).all()
+        late = pc.completes & ~on_time
+        if late.any():
+            assert (pc.weights[late] < pc.weights[on_time].min()).all(), \
+                "stale reports fold in at a strictly smaller weight"
+    assert saw_dropped_late, "12 rounds at straggler=0.5 must drop someone"
+
+
+def test_async_planner_elastic_resize_pads_with_zero_weight():
+    """resize(r)=2 on an m=4 step: ranks past the active count are padding
+    — weight 0, never reported (no bits), never complete (no cursor
+    advance), latency inf — so the compiled shape never changes."""
+    p = AsyncPlanner(4, chaos=ChaosConfig(seed=1),
+                     resize=lambda r: 2 if r % 2 == 0 else 4)
+    plan = p(0, np.arange(4))
+    assert (plan.weights[2:] == 0).all()
+    assert not plan.reported[2:].any() and not plan.completes[2:].any()
+    assert np.isinf(plan.latency[2:]).all()
+    assert plan.completes[:2].all()
+    np.testing.assert_allclose(plan.weights.sum(), 4, rtol=1e-6)
+    grown = p(1, np.arange(4))
+    assert grown.completes.all(), "odd rounds run the full cohort again"
+    with pytest.raises(ValueError, match="outside"):
+        AsyncPlanner(4, resize=lambda r: 0)(0, np.arange(4))
+
+
+def test_async_planner_zero_alive_round():
+    """dropout can darken the whole cohort: the plan reports an empty
+    round (deadline inf, no weights) instead of dividing by zero — the
+    driver skips the jitted launch entirely."""
+    p = AsyncPlanner(4, chaos=ChaosConfig(dropout=0.9, seed=0))
+    cohort = np.arange(4)
+    rnd = next(r for r in range(64) if not p(r, cohort).reported.any())
+    plan = p(rnd, cohort)
+    assert plan.deadline == np.inf
+    assert (plan.weights == 0).all() and not plan.completes.any()
+
+
+def test_async_planner_may_defer_matrix_and_validation():
+    """`may_defer` is the slotted-methods gate: anything that can finish a
+    round without advancing a client's cursor trips it."""
+    assert not AsyncPlanner(4).may_defer
+    assert not AsyncPlanner(
+        4, buffer_k=2, chaos=ChaosConfig(straggler=0.5)).may_defer
+    assert AsyncPlanner(4, late="drop").may_defer
+    assert AsyncPlanner(4, chaos=ChaosConfig(dropout=0.1)).may_defer
+    assert AsyncPlanner(4, resize=lambda r: 4).may_defer
+    with pytest.raises(ValueError, match="buffer_k"):
+        AsyncPlanner(4, buffer_k=0)
+    with pytest.raises(ValueError, match="buffer_k"):
+        AsyncPlanner(4, buffer_k=5)
+    with pytest.raises(ValueError, match="late"):
+        AsyncPlanner(4, late="bogus")
+    with pytest.raises(ValueError, match="discount"):
+        AsyncPlanner(4, discount=0.0)
+    with pytest.raises(ValueError, match="dropout"):
+        ChaosConfig(dropout=1.0)
+    with pytest.raises(ValueError, match="delay"):
+        ChaosConfig(delay=-0.5)
+
+
+def test_faulty_store_deterministic_and_atomic():
+    """Injected store failures are a pure function of (seed, call index):
+    a replay reproduces the exact failure schedule. Injection happens
+    BEFORE the underlying op, so a failed scatter leaves the store
+    untouched and the retry cannot double-apply."""
+    from repro.core.rules import get_rule
+
+    store = ClientStateStore.create(_params(), 6, get_rule("single"),
+                                    shard_size=3)
+    chaos = ChaosConfig(store_fail=0.5, seed=3)
+    cohort = np.array([0, 1])
+
+    def pattern(fs, ops=30):
+        out = []
+        for _ in range(ops):
+            try:
+                fs.gather(cohort)
+                out.append(False)
+            except TransientStoreError:
+                out.append(True)
+        return out
+
+    fs = FaultyStore(store, chaos)
+    pat = pattern(fs)
+    assert any(pat) and not all(pat), "store_fail=0.5 over 30 calls"
+    assert fs.injected_failures == sum(pat)
+    assert pattern(FaultyStore(store, chaos)) == pat, "same seed, same faults"
+    # atomicity: keep fs's call index rolling past the gather probes
+    before = store.gather(cohort)
+    upd = jax.tree.map(lambda x: x + 1.0, before)
+    applied = False
+    for _ in range(10):
+        try:
+            fs.scatter(cohort, upd)
+            applied = True
+            break
+        except TransientStoreError:
+            for k in before:
+                assert np.array_equal(store.gather(cohort)[k], before[k]), \
+                    "a failed scatter must not touch the store"
+    assert applied, "bounded retries must eventually land at fail=0.5"
+    for k in upd:
+        assert np.array_equal(store.gather(cohort)[k], upd[k])
+    # everything but gather/scatter delegates to the wrapped store
+    assert fs.population == 6
+    assert np.array_equal(fs.cursor, store.cursor)
+
+
+def test_async_stream_exactly_once_rr_under_dropout():
+    """THE exactly-once acceptance criterion, host-side: with seeded
+    dropout + stragglers and late='drop', a client's cursor advances ONLY
+    when its report completes — so a dropped client re-reads the SAME RR
+    position next time it is sampled, every consumed position is the
+    contiguous walk of its own epoch permutations, and every completed
+    data epoch is a full permutation (>= 3 epochs per client). A stream
+    rebuilt at `start_round` replays the planner over the skipped prefix
+    and lands on identical cursors/batches."""
+    C, n, b, m, total, restart = 8, 3, 1, 4, 48, 31
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(size=(C, n, b, 2)).astype(np.float32)}
+    sampler = ReshuffleSampler(C, n, mode="rr", seed=1)
+    cohorts = CohortSampler(C, m, seed=2)
+    planner = AsyncPlanner(m, buffer_k=3, late="drop",
+                           chaos=ChaosConfig(dropout=0.25, straggler=0.3,
+                                             delay=1.0, seed=13))
+    counts = np.zeros(C, np.int64)
+    consumed = [[] for _ in range(C)]
+    deferrals = 0
+    tail = []
+    with CohortStream(data, sampler, cohorts, prefetch=False,
+                      planner=planner) as stream:
+        for t in range(total):
+            fr = next(stream)
+            assert fr.plan is not None
+            for i, c in enumerate(fr.cohort):
+                e, pos = divmod(counts[c], n)
+                want = sampler.epoch_order(e)[c, pos]
+                # sampled clients always read from their OWN cursor —
+                # including clients about to be dropped, who will re-read
+                # this very position next time
+                assert fr.cols[i, 0] == want, (t, c)
+                assert np.array_equal(fr.batch["x"][i * b:(i + 1) * b],
+                                      data["x"][c, want])
+                if fr.plan.completes[i]:
+                    consumed[c].append(int(want))
+            deferrals += int((~fr.plan.completes).sum())
+            counts[fr.cohort[fr.plan.completes]] += 1
+            if t >= restart:
+                tail.append((fr.cohort.copy(), fr.batch["x"].copy()))
+    assert deferrals > 0, "chaos at these rates must defer someone"
+    assert counts.min() >= 3 * n, \
+        f"every client needs >= 3 completed epochs, got {counts}"
+    for c in range(C):
+        assert len(consumed[c]) == counts[c]
+        for e in range(counts[c] // n):  # every COMPLETED epoch
+            assert sorted(consumed[c][e * n:(e + 1) * n]) == list(range(n)), \
+                (c, e, consumed[c])
+    # resume: replaying the planner over [0, restart) lands mid-chaos
+    with CohortStream(data, sampler, cohorts, prefetch=False,
+                      planner=planner, start_round=restart) as resumed:
+        for cohort, x in tail:
+            fr = next(resumed)
+            assert np.array_equal(fr.cohort, cohort)
+            assert np.array_equal(fr.batch["x"], x)
+
+
+# ---------------------------------------------------------------------------
+# production acceptance: buffered-async fleet on the compiled elastic step
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("method", ["diana", "diana_rr"])
+def test_async_clean_run_bit_matches_sync_fleet(method, mesh_4x2):
+    """Chaos off + buffer_k == cohort size: the AsyncFleetRunner on the
+    ELASTIC compiled step (weights vector all-1.0) walks a bitwise
+    identical trajectory to the synchronous FleetRunner on the non-elastic
+    step — params, store shift tables, bits, cursors — for both the
+    single-shift and the per-slot wire."""
+    from repro.core.rules import WIRE_RULES
+    from repro.launch import compat, steps
+
+    mesh = mesh_4x2
+    n, b, seq, total = 3, 1, 8, 4
+    mode = "rr_shared" if method == "diana_rr" else "rr"
+    key = jax.random.key(4)
+
+    def run(async_mode):
+        cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+            mesh, method, n=n, elastic=async_mode)
+        data = _population_tokens(cfg, m, n, b, seq)
+        store = ClientStateStore.create(
+            abstract.params, m, WIRE_RULES[method], n_slots=agg.n_slots,
+            dtype=np.float32, shard_size=3)
+        cls = AsyncFleetRunner if async_mode else FleetRunner
+        with compat.set_mesh(mesh):
+            state = jax.device_put(
+                steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                       mesh=mesh), shardings)
+            with cls(jitted, abstract, shardings, batch_sh, agg=agg,
+                     mesh=mesh, data=data,
+                     sampler=ReshuffleSampler(m, n, mode=mode, seed=1),
+                     cohorts=CohortSampler(m, m, seed=9),
+                     store=store) as runner:
+                state = runner.run(state, key, total)
+        return jax.device_get(state), store
+
+    ref, ref_store = run(False)
+    got, got_store = run(True)
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref.params),
+            jax.tree_util.tree_leaves_with_path(got.params)):
+        assert np.asarray(a).tobytes() == np.asarray(bb).tobytes(), pa
+    everyone = np.arange(ref_store.population)
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref_store.gather(everyone)),
+            jax.tree_util.tree_leaves_with_path(got_store.gather(everyone))):
+        assert np.asarray(a).tobytes() == np.asarray(bb).tobytes(), pa
+    assert np.array_equal(ref_store.bits, got_store.bits)
+    assert np.array_equal(ref_store.cursor, got_store.cursor)
+
+
+@needs_mesh
+def test_async_fleet_resume_under_chaos_bit_exact(mesh_4x2, tmp_path):
+    """Mid-walk fleet checkpoint UNDER chaos (dropout + stragglers +
+    injected store failures with bounded retry) resumes bit-exactly: the
+    rebuilt stream replays the planner over the skipped rounds, the
+    FaultyStore wrapper re-arms, and metrics/params/store all match the
+    uninterrupted run."""
+    from repro.checkpoint import (
+        load_meta, restore_fleet_checkpoint, save_fleet_checkpoint)
+    from repro.core.rules import WIRE_RULES
+    from repro.launch import compat, steps
+
+    mesh = mesh_4x2
+    C, n, b, seq, total, cut = 8, 3, 1, 8, 6, 3
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, "diana", n=n, elastic=True)
+    data = _population_tokens(cfg, C, n, b, seq)
+    chaos = ChaosConfig(dropout=0.2, straggler=0.4, delay=1.0,
+                        store_fail=0.3, max_retries=3, seed=5)
+    mk_store = lambda: ClientStateStore.create(
+        abstract.params, C, WIRE_RULES["diana"], dtype=np.float32,
+        shard_size=3)
+    mk_runner = lambda start, store: AsyncFleetRunner(
+        jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
+        data=data, sampler=ReshuffleSampler(C, n, mode="rr", seed=1),
+        cohorts=CohortSampler(C, m, seed=9), store=store, buffer_k=3,
+        late="drop", chaos=chaos, start_round=start)
+    key = jax.random.key(4)
+    path = str(tmp_path / "fleet_async.ckpt")
+    trace = lambda mx: (b"skip" if mx.get("skipped")
+                        else np.asarray(mx["loss"]).tobytes())
+
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh), shardings)
+        store = mk_store()
+        runner = mk_runner(0, store)
+        losses_a = []
+
+        def snap(t, st, metrics):
+            losses_a.append(trace(metrics))
+            if t + 1 == cut:
+                save_fleet_checkpoint(path, jax.device_get(st), store,
+                                      step=t + 1,
+                                      meta={"fleet":
+                                            runner.checkpoint_meta()})
+
+        with runner:
+            state = runner.run(state, key, total, callback=snap)
+        ref, ref_store = jax.device_get(state), store
+
+        fm = load_meta(path)["meta"]["fleet"]
+        assert fm["round"] == cut
+        assert fm["async"]["chaos"]["dropout"] == 0.2
+        store_b = mk_store()
+        state_b = restore_fleet_checkpoint(path, abstract, shardings,
+                                           store_b)
+        losses_b = []
+        with mk_runner(fm["round"], store_b) as runner_b:
+            state_b = runner_b.run(
+                state_b, key, total - cut,
+                callback=lambda t, st, mx: losses_b.append(trace(mx)))
+        flt = jax.device_get(state_b)
+
+    assert losses_b == losses_a[cut:]
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref.params),
+            jax.tree_util.tree_leaves_with_path(flt.params)):
+        assert np.asarray(a).tobytes() == np.asarray(bb).tobytes(), pa
+    everyone = np.arange(C)
+    for (pa, a), (_, bb) in zip(
+            jax.tree_util.tree_leaves_with_path(ref_store.gather(everyone)),
+            jax.tree_util.tree_leaves_with_path(store_b.gather(everyone))):
+        assert np.array_equal(a, bb), pa
+    assert np.array_equal(ref_store.cursor, store_b.cursor)
+    assert np.array_equal(ref_store.bits, store_b.bits)
+    # under drop + dropout some clients must sit below the full walk
+    assert ref_store.cursor.sum() < \
+        CohortSampler(C, m, seed=9).participation_counts(total).sum()
+
+
+@needs_mesh
+def test_fleet_mean_scale_tracks_population_mean(mesh_4x2):
+    """PR-5 carry-over (a): with `mean_scale = M/C` the device-resident
+    mean shift integrates beta = (M/C) * alpha per round, which is exactly
+    the population mean of the per-client store shifts — not the
+    (C/M)-inflated cohort estimate the unscaled update would keep."""
+    from repro.core.rules import WIRE_RULES
+    from repro.launch import compat, steps
+
+    mesh = mesh_4x2
+    C, n, b, seq, total = 8, 3, 1, 8, 4  # 2 whole fleet epochs
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, "diana", n=n, mean_scale=0.5)  # m/C = 4/8
+    data = _population_tokens(cfg, C, n, b, seq)
+    store = ClientStateStore.create(abstract.params, C, WIRE_RULES["diana"],
+                                    dtype=np.float32, shard_size=3)
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh), shardings)
+        with FleetRunner(jitted, abstract, shardings, batch_sh, agg=agg,
+                         mesh=mesh, data=data,
+                         sampler=ReshuffleSampler(C, n, mode="rr", seed=1),
+                         cohorts=CohortSampler(C, m, seed=3),
+                         store=store) as runner:
+            state = runner.run(state, jax.random.key(2), total)
+    mean_shift = jax.device_get(state.mean_shift)
+    got = store.gather(np.arange(C))
+    moved = False
+    for (pa, h_bar), (_, rows) in zip(
+            jax.tree_util.tree_leaves_with_path(mean_shift),
+            jax.tree_util.tree_leaves_with_path(got)):
+        pop_mean = np.asarray(rows, np.float64).mean(axis=0)
+        np.testing.assert_allclose(np.asarray(h_bar), pop_mean.astype(
+            np.float32), atol=1e-5, err_msg=str(pa))
+        moved |= bool(np.abs(np.asarray(h_bar)).max() > 0)
+    assert moved, "4 rounds of DIANA must move the mean shift"
+
+
+@needs_mesh
+def test_fleet_flat_nastya_pod_shift_roundtrip(mesh_4x2):
+    """PR-5 carry-over (b): flat-mesh NASTYA (local_steps > 1 maps every
+    client onto its own pod) now RUNS as a fleet — the driver round-trips
+    `TrainState.pod_shifts` through the store instead of rejecting the
+    config. Sampled clients' rows move, cursors advance by local_steps per
+    participation, and device tables stay O(cohort)."""
+    from repro.core.rules import WIRE_RULES
+    from repro.launch import compat, steps
+
+    mesh = mesh_4x2
+    C, n, b, seq, total, ls = 12, 4, 1, 8, 2, 2
+    cfg, m, agg, jitted, abstract, shardings, batch_sh = _fleet_setup(
+        mesh, "diana", n=n, local_steps=ls)
+    assert abstract.shifts is None and abstract.pod_shifts is not None, \
+        "flat NASTYA keeps per-client DIANA state in the pod tables"
+    data = _population_tokens(cfg, C, n, b, seq)
+    store = ClientStateStore.create(abstract.params, C, WIRE_RULES["diana"],
+                                    dtype=np.float32, shard_size=3)
+    cohorts = CohortSampler(C, m, seed=3)
+    with compat.set_mesh(mesh):
+        state = jax.device_put(
+            steps.init_train_state(jax.random.key(0), cfg, agg, m,
+                                   mesh=mesh, local_steps=ls), shardings)
+        losses = []
+        with FleetRunner(jitted, abstract, shardings, batch_sh, agg=agg,
+                         mesh=mesh, data=data,
+                         sampler=ReshuffleSampler(C, n, mode="rr", seed=1),
+                         cohorts=cohorts, store=store,
+                         local_steps=ls) as runner:
+            state = runner.run(
+                state, jax.random.key(2), total,
+                callback=lambda t, st, mx: losses.append(
+                    float(mx["loss"])))
+    assert np.isfinite(losses).all() and len(losses) == total
+    sampled = np.unique(np.concatenate(
+        [cohorts.cohort_for_round(r) for r in range(total)]))
+    unsampled = np.setdiff1d(np.arange(C), sampled)
+    assert unsampled.size, "2 rounds of C=12/m=4 leave clients unsampled"
+    touched = store.gather(sampled)
+    assert any(np.abs(l).max() > 0 for l in jax.tree.leaves(touched)), \
+        "pod_shifts must round-trip into the store"
+    for leaf in jax.tree.leaves(store.gather(unsampled)):
+        assert np.abs(leaf).max() == 0
+    assert np.array_equal(store.cursor,
+                          cohorts.participation_counts(total) * ls)
+    for leaf in jax.tree.leaves(jax.device_get(state.pod_shifts)):
+        assert leaf.shape[0] == m, "device tables stay cohort-sized"

@@ -113,6 +113,43 @@ def test_diana_shift_matches_ref(n, dtype):
                                    atol=5e-2 if dtype == jnp.bfloat16 else 1e-6)
 
 
+def test_diana_shift_beta_second_stepsize():
+    """The mean-shift update takes its own stepsize beta (fleets pass
+    mean_scale*alpha, DESIGN.md §3.9): kernel matches reference for
+    beta != alpha, and the beta=None default is bitwise the beta=alpha
+    path — the no-rescale configs keep their exact trajectory."""
+    n = 128 * 3
+    ks = jax.random.split(jax.random.key(7), 4)
+    h, qo, mh, qm = (jax.random.normal(k, (n,)) for k in ks)
+    alpha, beta = 0.25, 0.0625  # beta = (M/C) * alpha at M/C = 1/4
+    got = diana_shift_update(h, qo, mh, qm, alpha=alpha, beta=beta)
+    want = ref.diana_shift_update_ref(h, qo, mh, qm, alpha, beta)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+    # only the mean-shift output moves with beta
+    base = diana_shift_update(h, qo, mh, qm, alpha=alpha)
+    assert np.array_equal(np.asarray(got[1]), np.asarray(base[1]))
+    assert not np.array_equal(np.asarray(got[2]), np.asarray(base[2]))
+    np.testing.assert_allclose(np.asarray(got[2]),
+                               np.asarray(mh) + beta * np.asarray(qm),
+                               atol=1e-6)
+    for defaulted, explicit in zip(
+            base, diana_shift_update(h, qo, mh, qm, alpha=alpha, beta=alpha)):
+        assert np.asarray(defaulted).tobytes() == \
+            np.asarray(explicit).tobytes()
+
+
+def test_backend_parity_diana_shift_beta():
+    ks = jax.random.split(jax.random.key(27), 4)
+    trees = [jax.tree.map(lambda l, kk=kk: jax.random.normal(kk, l.shape), TREE)
+             for kk in ks]
+    got = PAL.tree_diana_shift(*trees, alpha=0.17, beta=0.03)
+    want = REF.tree_diana_shift(*trees, alpha=0.17, beta=0.03)
+    for gt, wt in zip(got, want):
+        for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(wt)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
 def test_diana_shift_fixed_point():
     """At the DIANA fixed point (h == g, q == 0) the direction is H_t and
     shifts do not move — the Theorem 2 stationarity on the kernel path."""
