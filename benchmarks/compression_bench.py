@@ -597,6 +597,130 @@ def run_fleet_async_bench(*, quick: bool, reps: int):
     return out
 
 
+def run_fleet_paging_bench(*, quick: bool, reps: int):
+    """Out-of-core fleet data (DESIGN.md §3.11): the O(cohort) paging claim.
+
+    pop_scaling — COLD per-round cohort assembly through
+    `CohortStream(paged=LookaheadPager(...))` with lookahead 0 (every round
+    reads its pages from disk) at populations 1e3..1e6. A round touches at
+    most min(num_shards, m) pages per leaf — ~32KB here — so per-round time
+    must track the COHORT, not the population: the largest/smallest ratio
+    should sit near 1x. The 1e6-client store is written sparsely (only the
+    clients the timed walk visits; absent shards read as zeros), so the
+    bench itself stays O(rounds), not O(population).
+
+    overlap — the prefetch-hidden fraction, mirroring `run_pipeline_bench`:
+    a busy "train step" (GIL-releasing sleep) fed by a lookahead-1 paged
+    stream, synchronous vs prefetching. The lookahead worker loads round
+    t+1's pages while round t's step runs, so the page-in cost should
+    disappear into the step.
+    """
+    import tempfile
+
+    from repro.data.paging import ClientDataStore, LookaheadPager
+    from repro.data.pipeline import CohortStream
+    from repro.data.reshuffle import ReshuffleSampler
+    from repro.fleet import CohortSampler
+
+    m, n, b, d = 8, 2, 1, 64  # one f32 leaf (n, b, d): 512B per client
+    shard = 64                # page = shard * 512B = 32KB
+    rounds = 20 if quick else 50
+    pops = (1_000, 100_000) if quick else (1_000, 100_000, 1_000_000)
+    per_client = n * b * d * 4
+
+    print(f"\n--- fleet paging: cohort {m}, {per_client}B/client, "
+          f"{shard}-client shards " + "-" * 14)
+    out = {"cohort": m, "shard_size": shard, "bytes_per_client": per_client,
+           "page_bytes": shard * per_client}
+
+    def build_store(path, pop, touched):
+        rng = np.random.default_rng(pop)
+        if pop <= 100_000:
+            return ClientDataStore.from_stacked(
+                path, {"x": rng.normal(
+                    size=(pop, n, b, d)).astype(np.float32)},
+                shard_size=shard)
+        ds = ClientDataStore.create(
+            path, pop, {"x": jax.ShapeDtypeStruct((n, b, d), jnp.float32)},
+            shard_size=shard)
+        ds.write_rows(touched, {"x": rng.normal(
+            size=(touched.size, n, b, d)).astype(np.float32)})
+        return ds
+
+    def fresh_stream(pop, pager, prefetch, start=0):
+        return CohortStream(None, ReshuffleSampler(pop, n, seed=1),
+                            CohortSampler(pop, m, seed=0), paged=pager,
+                            prefetch=prefetch, start_round=start)
+
+    round_s = {}
+    for pop in pops:
+        total = 1 + reps * rounds
+        cs = CohortSampler(pop, m, seed=0)
+        touched = np.unique(np.concatenate(
+            [cs.cohort_for_round(t) for t in range(total + 1)]))
+        with tempfile.TemporaryDirectory() as tmp:
+            ds = build_store(tmp, pop, touched)
+            pager = LookaheadPager(ds, lookahead=0)  # cold every round
+            times = []
+            with fresh_stream(pop, pager, False) as stream:
+                next(stream)  # warm: sampler epoch orders + first pages
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    for _ in range(rounds):
+                        next(stream)
+                    times.append((time.perf_counter() - t0) / rounds)
+            sec = float(np.median(times))
+            label = f"C=1e{int(math.log10(pop))}"
+            round_s[label] = sec
+            print(f"paging {label:10s} {fmt(sec)}/round cold  "
+                  f"(store {ds.nbytes / 1e6:7.1f}MB, "
+                  f"resident {pager.resident_nbytes() / 1e3:.0f}KB)")
+            out[label] = {"round_s": sec, "population": pop,
+                          "store_nbytes": ds.nbytes,
+                          "resident_nbytes": pager.resident_nbytes()}
+    # THE claim: round cost is O(cohort pages), flat in population
+    out["pop_scaling_x"] = max(round_s.values()) / min(round_s.values())
+    print(f"paging 1e{int(math.log10(pops[-1]))}/1e3 round-time ratio "
+          f"{out['pop_scaling_x']:5.2f}x (O(cohort) paging: ~1x)")
+
+    # prefetch overlap at the mid population, pipeline-bench style
+    pop = pops[1]
+    with tempfile.TemporaryDirectory() as tmp:
+        ds = build_store(tmp, pop, np.empty((0,), np.int64))
+
+        def run_loop(prefetch):
+            times = []
+            for r in range(max(2, reps // 2)):
+                pager = LookaheadPager(ds, lookahead=1)
+                with fresh_stream(pop, pager, prefetch,
+                                  start=r * (rounds + 1)) as st:
+                    next(st)  # warm the window before timing
+                    t0 = time.perf_counter()
+                    for _ in range(rounds):
+                        next(st)
+                        busy_step()
+                    times.append((time.perf_counter() - t0) / rounds)
+            return float(np.median(times))
+
+        assemble_s = round_s[f"C=1e{int(math.log10(pop))}"]
+        t_step = max(2.0 * assemble_s, 2e-3)
+
+        def busy_step():
+            time.sleep(t_step)
+
+        sync_s, pre_s = run_loop(False), run_loop(True)
+        hidden = min(1.0, max(0.0, (sync_s - pre_s) / max(assemble_s, 1e-9)))
+        print(f"paging sync       {fmt(sync_s)}/step  "
+              f"(step busy {fmt(t_step)})")
+        print(f"paging prefetch   {fmt(pre_s)}/step   "
+              f"({100 * hidden:.0f}% of page-in hidden)")
+        out["overlap"] = {"population": pop, "step_busy_s": t_step,
+                          "sync_s_per_step": sync_s,
+                          "prefetch_s_per_step": pre_s,
+                          "pagein_hidden_frac": hidden}
+    return out
+
+
 def check_baseline(results: dict, baseline_path: str) -> bool:
     """CI guard: fail when the pallas-vs-reference (and pallas-vs-seed)
     Rand-k speedups regress below the committed BENCH_compression.json.
@@ -679,6 +803,9 @@ def main() -> None:
 
     results["fleet_async"] = run_fleet_async_bench(quick=args.quick,
                                                    reps=max(3, reps // 2))
+
+    results["fleet_paging"] = run_fleet_paging_bench(quick=args.quick,
+                                                     reps=max(3, reps // 2))
 
     sp = results["scales"]["logreg"]["randk_speedup_pallas_vs_seed"]
     results["meta"]["elapsed_s"] = round(time.time() - t0, 1)

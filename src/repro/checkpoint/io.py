@@ -151,24 +151,50 @@ def restore_train_state(path: str, abstract_state: Any, shardings: Any) -> Any:
 
 def save_fleet_checkpoint(path: str, state: Any, store, *,
                           step: int | None = None,
-                          meta: dict | None = None) -> None:
+                          meta: dict | None = None,
+                          data_store=None) -> None:
     """One atomic checkpoint of a fleet run: the (host-fetched) TrainState,
     the population store (`ClientStateStore.as_tree()` — per-shard arrays,
     no concatenation), and the fleet cursor/sampler specs in the manifest
     meta (`FleetRunner.checkpoint_meta()` under the 'fleet' key) so
-    `--resume` can validate + rebuild the walk before touching buffers."""
+    `--resume` can validate + rebuild the walk before touching buffers.
+
+    `data_store`: the paged run's `ClientDataStore` — its layout spec is
+    recorded so a resume refuses a mismatched (or missing) data store."""
     meta = dict(meta or {})
     meta.setdefault("store_spec", store.spec())
+    if data_store is not None:
+        meta.setdefault("data_store_spec", data_store.spec())
     save_pytree(path, {"state": state, "store": store.as_tree()},
                 step=step, meta=meta)
 
 
 def restore_fleet_checkpoint(path: str, abstract_state: Any, shardings: Any,
-                             store) -> Any:
+                             store, *, data_store=None) -> Any:
     """Restore a `save_fleet_checkpoint` file: the TrainState goes onto the
     target shardings, the store (built fresh by the caller with the run's
     own layout) is filled IN PLACE from host memory — population-sized
-    buffers never touch a device. Returns the device TrainState."""
+    buffers never touch a device. Returns the device TrainState.
+
+    Pass the resumed run's `data_store` (or None for an in-RAM run): its
+    layout is checked against the recorded `data_store_spec` BEFORE any
+    buffer is decoded — a paged checkpoint refuses to resume in-RAM or
+    onto a store with a different population/shard/leaf layout, because
+    page identities and the resident-set bound both derive from it."""
+    saved = (load_meta(path)["meta"] or {}).get("data_store_spec")
+    have = None if data_store is None else data_store.spec()
+    if saved != have:
+        def _describe(spec):
+            if spec is None:
+                return "in-RAM client-stacked data (no data store)"
+            return (f"data store with population {spec['population']}, "
+                    f"shard_size {spec['shard_size']}, leaves "
+                    f"{sorted(spec['leaves'])}")
+        raise CheckpointError(
+            f"{path}: checkpoint was written against "
+            f"{_describe(saved)} but this run uses {_describe(have)} — "
+            "resume with the matching --data-store layout (the paged walk "
+            "is only bit-reproducible over the same layout)")
     tree = load_pytree(path, {"state": abstract_state,
                               "store": store.as_tree()}, device=False)
     store.load_tree(tree["store"])

@@ -3,6 +3,7 @@ from repro.data.logreg import (
     make_federated_logreg,
     logreg_constants,
 )
+from repro.data.paging import ClientDataStore, LookaheadPager
 from repro.data.pipeline import (
     BatchStream,
     CohortStream,
@@ -18,10 +19,12 @@ from repro.data.tokens import synthetic_token_batches
 
 __all__ = [
     "BatchStream",
+    "ClientDataStore",
     "CohortStream",
     "EpochIterator",
     "FleetRound",
     "LogRegProblem",
+    "LookaheadPager",
     "ReshuffleSampler",
     "abstract_stream_batch",
     "logreg_constants",

@@ -423,13 +423,26 @@ class CohortStream(_PrefetchStream):
     With `cohort == population` under cohort-RR every round samples every
     client in ascending order and the emitted batches are exactly
     `BatchStream`'s — the fleet bit-match invariant (DESIGN.md §3.9).
+
+    `paged=` (a `repro.data.paging.LookaheadPager`, exclusive with `data=`)
+    swaps the in-RAM client-stacked tree for the out-of-core store behind
+    the SAME per-cohort view: the pager's `views` satisfy the identical
+    `views[name][c]` indexing contract, so `_assemble_rows` — and therefore
+    every emitted batch — is bit-identical to the in-RAM path. After each
+    build the stream calls `paged.advance_window(t, cohort_sampler)` on the
+    prefetch worker, so the next cohort's pages load while the current
+    round's step runs (DESIGN.md §3.11). Page residency follows the cohort
+    walk, NOT per-client cursors: a planner's non-completers re-read the
+    same rows next time sampled because their `counts` never advanced —
+    paging changes where rows live, never which rows are read.
     """
 
-    def __init__(self, data: Mapping[str, Any], sampler: ReshuffleSampler,
+    def __init__(self, data: Mapping[str, Any] | None,
+                 sampler: ReshuffleSampler,
                  cohort_sampler, *, local_steps: int = 1,
                  put: PutFn | None = None, prefetch: bool = True,
                  drop_remainder: bool = True, start_round: int = 0,
-                 planner=None):
+                 planner=None, paged=None):
         if local_steps < 1:
             raise ValueError(f"local_steps={local_steps}")
         if sampler.m != cohort_sampler.population:
@@ -437,8 +450,21 @@ class CohortStream(_PrefetchStream):
                 f"data sampler covers {sampler.m} clients but the cohort "
                 f"sampler draws from a population of "
                 f"{cohort_sampler.population}")
-        self._views, n_avail = normalize_client_data(
-            data, sampler.m, drop_remainder=drop_remainder)
+        if paged is not None:
+            if data is not None:
+                raise ValueError(
+                    "pass data= (in-RAM client-stacked tree) OR paged= "
+                    "(LookaheadPager over an on-disk ClientDataStore), "
+                    "not both")
+            if paged.population != sampler.m:
+                raise ValueError(
+                    f"paged store holds {paged.population} clients but the "
+                    f"data sampler covers {sampler.m}")
+            self._views, n_avail = paged.views, paged.n_batches
+        else:
+            self._views, n_avail = normalize_client_data(
+                data, sampler.m, drop_remainder=drop_remainder)
+        self._paged = paged
         if sampler.n > n_avail:
             raise ValueError(
                 f"sampler indexes {sampler.n} batches/client but the data "
@@ -503,8 +529,14 @@ class CohortStream(_PrefetchStream):
         return t, cohort, cols, part
 
     def _build(self, plan):
-        _, cohort, cols, _ = plan
-        return _assemble_rows(self._views, cohort, cols, self._put)
+        t, cohort, cols, _ = plan
+        built = _assemble_rows(self._views, cohort, cols, self._put)
+        if self._paged is not None:
+            # closed-form lookahead: round t is assembled, so prefetch the
+            # pages rounds t+1.. will touch and evict the rest (worker
+            # thread — overlaps the running step, DESIGN.md §3.11)
+            self._paged.advance_window(t, self.cohorts)
+        return built
 
     def _emit(self, plan, built) -> FleetRound:
         t, cohort, cols, part = plan

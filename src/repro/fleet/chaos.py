@@ -26,7 +26,8 @@ Three pieces:
     at its pre-round position with its shift table untouched.
 
 ``FaultyStore``
-    A `ClientStateStore` wrapper whose gather/scatter raise deterministic
+    A `ClientStateStore` wrapper whose gather/scatter/advance/add_bits
+    raise deterministic
     `TransientStoreError`s; the async driver retries with bounded
     exponential backoff (`AsyncFleetRunner._io_retry`). Injection happens
     BEFORE the underlying op, so a store op either happens atomically or
@@ -115,7 +116,12 @@ class ParticipationPlan(NamedTuple):
     reported:  (m,) bool — the client transmitted this round (uplink bits
                are charged even when a late report is dropped);
     latency:   (m,) simulated report latencies (inf = dark/padded);
-    deadline:  the K-th fastest alive latency (the buffer trigger).
+    deadline:  the K-th fastest alive latency (the buffer trigger);
+    on_time:   (m,) bool — alive AND within the deadline. This is the
+               truth for participation metrics: the normalized `weights`
+               can exceed 1.0 for discounted LATE reports whenever the
+               rescale factor m/sum(w) > 1 (any late/dark client), so
+               thresholding weights misclassifies them.
     """
 
     weights: np.ndarray
@@ -123,6 +129,7 @@ class ParticipationPlan(NamedTuple):
     reported: np.ndarray
     latency: np.ndarray
     deadline: float
+    on_time: np.ndarray
 
 
 class AsyncPlanner:
@@ -202,7 +209,8 @@ class AsyncPlanner:
         completes = np.zeros(m, bool)
         if n_alive == 0:
             return ParticipationPlan(weights.astype(np.float32), completes,
-                                     alive.copy(), latency, np.inf)
+                                     alive.copy(), latency, np.inf,
+                                     np.zeros(m, bool))
         k = min(self.buffer_k, n_alive)
         deadline = float(np.partition(latency, k - 1)[k - 1])
         on_time = alive & (latency <= deadline)
@@ -219,17 +227,19 @@ class AsyncPlanner:
         # (m / m), which the elastic wire multiplies in as a bitwise no-op
         weights = weights * (m / weights.sum())
         return ParticipationPlan(weights.astype(np.float32), completes,
-                                 alive, latency, deadline)
+                                 alive, latency, deadline, on_time)
 
 
 class FaultyStore:
     """Deterministic transient-failure wrapper around a `ClientStateStore`.
 
-    gather/scatter draw from `(seed, round-robin call index)` and raise
-    `TransientStoreError` BEFORE touching the underlying store when the
-    draw fires — the op either happens atomically or not at all, so the
-    driver's bounded retry (a fresh call index per attempt) can never
-    double-apply a scatter. All other attributes delegate.
+    gather/scatter/advance/add_bits draw from `(seed, round-robin call
+    index)` and raise `TransientStoreError` BEFORE touching the underlying
+    store when the draw fires — the op either happens atomically or not at
+    all, so the driver's bounded retry (a fresh call index per attempt) can
+    never double-apply a scatter or a cursor advance. All other attributes
+    delegate uninjected (`touch` is a prefetch hint, `as_tree` a
+    checkpoint read — neither sits on the retried round path).
     """
 
     def __init__(self, store, chaos: ChaosConfig):
@@ -253,6 +263,14 @@ class FaultyStore:
     def scatter(self, cohort, updated):
         self._maybe_fail("scatter")
         return self._store.scatter(cohort, updated)
+
+    def advance(self, cohort, micro_steps):
+        self._maybe_fail("advance")
+        return self._store.advance(cohort, micro_steps)
+
+    def add_bits(self, cohort, bits_per_client):
+        self._maybe_fail("add_bits")
+        return self._store.add_bits(cohort, bits_per_client)
 
     def __getattr__(self, name):
         return getattr(self._store, name)

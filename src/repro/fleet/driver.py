@@ -68,9 +68,10 @@ class FleetRunner:
     """
 
     def __init__(self, jitted, abstract, shardings, batch_sh, *, agg, mesh,
-                 data, sampler, cohorts: CohortSampler,
+                 data=None, sampler, cohorts: CohortSampler,
                  store: ClientStateStore, local_steps: int = 1,
-                 prefetch: bool = True, start_round: int = 0, planner=None):
+                 prefetch: bool = True, start_round: int = 0, planner=None,
+                 paged=None):
         m = num_clients(mesh)
         if cohorts.cohort_size != m:
             raise ValueError(
@@ -123,10 +124,15 @@ class FleetRunner:
         self._shardings = shardings
         self._store = store
         self._local_steps = int(local_steps)
+        self._pager = paged
         self._stream = CohortStream(
             data, sampler, cohorts, local_steps=local_steps,
             put=lambda b: jax.device_put(b, batch_sh(b)), prefetch=prefetch,
-            start_round=start_round, planner=planner)
+            start_round=start_round, planner=planner, paged=paged)
+        if paged is not None:
+            # all store I/O routes through the pager from here on; the
+            # async subclass re-binds after its chaos FaultyStore wrap
+            paged.bind_store(self._store)
         if not np.array_equal(store.cursor, self._stream.counts):
             bad = np.flatnonzero(store.cursor != self._stream.counts)
             shown = ", ".join(str(c) for c in bad[:8])
@@ -155,9 +161,12 @@ class FleetRunner:
     def checkpoint_meta(self) -> dict:
         """JSON-serializable fleet cursor + sampler/store specs for the
         checkpoint manifest (`checkpoint.save_fleet_checkpoint`)."""
-        return {**self._stream.cursor_meta(),
+        meta = {**self._stream.cursor_meta(),
                 "store": self._store.spec(),
                 "bits_per_client_round": self._bits_per_client}
+        if self._pager is not None:
+            meta["data_store"] = self._pager.data.spec()
+        return meta
 
     def _device_shifts(self, state):
         return getattr(state, self._shift_field)
@@ -168,10 +177,13 @@ class FleetRunner:
         TrainState. `callback(round, state, metrics)` fires per round
         (logging/checkpoint hooks). The store is updated in place."""
         store = self._store
+        # paged runs route gather/scatter through the pager (one I/O
+        # object for data pages and state rows); it delegates to the store
+        io = self._pager if self._pager is not None else store
         for _ in range(rounds):
             fr = next(self._stream)
             state = _steps.with_cohort_shifts(
-                state, store.gather(fr.cohort), self._shardings,
+                state, io.gather(fr.cohort), self._shardings,
                 self._shift_field)
             if self._slotted:
                 if not (fr.cols == fr.cols[:1]).all():
@@ -185,8 +197,8 @@ class FleetRunner:
             else:
                 state, metrics = self._jitted(state, fr.batch, key)
             if store.has_shifts:
-                store.scatter(fr.cohort,
-                              jax.device_get(self._device_shifts(state)))
+                io.scatter(fr.cohort,
+                           jax.device_get(self._device_shifts(state)))
             store.advance(fr.cohort, self._local_steps)
             store.add_bits(fr.cohort, self._bits_per_client)
             if callback is not None:
@@ -229,13 +241,13 @@ class AsyncFleetRunner(FleetRunner):
     """
 
     def __init__(self, jitted, abstract, shardings, batch_sh, *, agg, mesh,
-                 data, sampler, cohorts: CohortSampler,
+                 data=None, sampler, cohorts: CohortSampler,
                  store: ClientStateStore, buffer_k: int | None = None,
                  late: str = "discount", discount: float = 0.5,
                  chaos: ChaosConfig | None = None,
                  resize: Callable[[int], int] | None = None,
                  local_steps: int = 1, prefetch: bool = True,
-                 start_round: int = 0):
+                 start_round: int = 0, paged=None):
         if local_steps != 1:
             raise ValueError(
                 "async/elastic fleet rounds need local_steps == 1 (the "
@@ -249,7 +261,8 @@ class AsyncFleetRunner(FleetRunner):
                          mesh=mesh, data=data, sampler=sampler,
                          cohorts=cohorts, store=store,
                          local_steps=local_steps, prefetch=prefetch,
-                         start_round=start_round, planner=planner)
+                         start_round=start_round, planner=planner,
+                         paged=paged)
         if self._slotted and planner.may_defer:
             raise ValueError(
                 "per-slot methods (diana_rr) cannot run with dropout, "
@@ -261,8 +274,13 @@ class AsyncFleetRunner(FleetRunner):
         self._planner = planner
         if self._chaos.store_fail > 0:
             # wrap AFTER the cursor cross-check: injection hits the round
-            # loop's gathers/scatters, not construction
+            # loop's store ops, not construction
             self._store = FaultyStore(self._store, self._chaos)
+            if self._pager is not None:
+                # re-bind so paged gather/scatter hit the SAME injection
+                # schedule as the unpaged path (pager.state.touch warming
+                # delegates uninjected through FaultyStore.__getattr__)
+                self._pager.bind_store(self._store)
 
     def checkpoint_meta(self) -> dict:
         return {**super().checkpoint_meta(), "async": self._planner.spec()}
@@ -287,6 +305,7 @@ class AsyncFleetRunner(FleetRunner):
         `dropped`, `deadline`); zero-completer rounds report
         `{"skipped": True}` and leave the state untouched."""
         store = self._store
+        io = self._pager if self._pager is not None else store
         for _ in range(rounds):
             fr = next(self._stream)
             plan = fr.plan
@@ -296,13 +315,13 @@ class AsyncFleetRunner(FleetRunner):
                 # the buffer never fills: no server update this round, but
                 # reporters still burned uplink bits
                 if plan.reported.any():
-                    store.add_bits(fr.cohort[plan.reported],
+                    self._io_retry(store.add_bits, fr.cohort[plan.reported],
                                    self._bits_per_client)
                 if callback is not None:
                     callback(fr.round, state, {"skipped": True})
                 continue
             state = _steps.with_cohort_shifts(
-                state, self._io_retry(store.gather, fr.cohort),
+                state, self._io_retry(io.gather, fr.cohort),
                 self._shardings, self._shift_field)
             weights = jnp.asarray(plan.weights)
             if self._slotted:
@@ -318,14 +337,18 @@ class AsyncFleetRunner(FleetRunner):
                 upd = jax.device_get(self._device_shifts(state))
                 idx = np.flatnonzero(comp)
                 self._io_retry(
-                    store.scatter, fr.cohort[idx],
+                    io.scatter, fr.cohort[idx],
                     jax.tree.map(lambda l: l[idx], upd))
-            store.advance(fr.cohort[comp], self._local_steps)
-            store.add_bits(fr.cohort[plan.reported], self._bits_per_client)
+            self._io_retry(store.advance, fr.cohort[comp], self._local_steps)
+            self._io_retry(store.add_bits, fr.cohort[plan.reported],
+                           self._bits_per_client)
             if callback is not None:
                 metrics = dict(metrics)
                 metrics.update(
-                    on_time=int((plan.weights >= 1.0).sum()),
+                    # from the plan, not the weights: the m/sum(w) rescale
+                    # pushes discounted LATE weights past 1.0 whenever any
+                    # client is late/dark
+                    on_time=int(plan.on_time.sum()),
                     completed=n_comp,
                     dropped=int(fr.cohort.size - plan.reported.sum()),
                     deadline=float(plan.deadline))

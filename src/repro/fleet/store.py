@@ -161,9 +161,16 @@ class ClientStateStore:
         if cohort.ndim != 1:
             raise ValueError(f"cohort must be a 1-D id vector, got shape "
                              f"{cohort.shape}")
-        if cohort.size and (cohort[0] < 0 or cohort[-1] >= self.population):
+        # full-vector bounds check BEFORE sortedness: an unsorted cohort
+        # with out-of-range ids must get the bounds error (naming the bad
+        # ids), not a misleading "strictly increasing" complaint
+        oob = cohort[(cohort < 0) | (cohort >= self.population)]
+        if oob.size:
+            shown = ", ".join(str(c) for c in oob[:8])
+            more = f" (+{oob.size - 8} more)" if oob.size > 8 else ""
             raise ValueError(
-                f"cohort ids outside [0, {self.population})")
+                f"cohort ids outside [0, {self.population}): "
+                f"[{shown}]{more}")
         if np.any(np.diff(cohort) <= 0):
             raise ValueError(
                 "cohort must be strictly increasing — sorted, distinct ids "
@@ -223,6 +230,19 @@ class ClientStateStore:
                 raise ValueError(
                     f"scatter leaf shape {arr.shape} != cohort slice {want}")
             self._put(shards, cohort, arr.astype(shards[0].dtype, copy=False))
+
+    def touch(self, cohort: np.ndarray) -> int:
+        """Warm the cohort's shift rows (the lookahead pager's prefetch
+        hint, DESIGN.md §3.11): reads and discards them so memmap-backed
+        shards fault their pages in off the critical path. Returns bytes
+        touched; no-op for memory-free rules."""
+        if not self.has_shifts:
+            return 0
+        cohort = self._check_cohort(cohort)
+        n = 0
+        for shards in self._shift_leaves:
+            n += self._take(shards, cohort).nbytes
+        return n
 
     # -- cursors / accounting --------------------------------------------------
 

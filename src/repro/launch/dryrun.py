@@ -100,7 +100,7 @@ def _probe_cfg(cfg, k: int):
 
 def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1,
                 buffer_k: int | None = None, chaos_dropout: float = 0.0,
-                chaos_seed: int = 0):
+                chaos_seed: int = 0, data_store: str | None = None):
     """Fleet sizing at population scale C — NO population-sized allocation.
 
     Proves, next to the compiled step, that the fleet layer scales: the
@@ -162,6 +162,46 @@ def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1,
                         "rounds_probed": len(probed),
                         "mean_completers": float(np.mean(done)),
                         "min_completers": int(min(done))}
+    if data_store is not None:
+        # paged-data probe at population scale: a sparse on-disk store (no
+        # shard file until written — absent shards read as zeros, so a
+        # 10^5-client layout costs one spec file), a REAL paged
+        # CohortStream walking 8 rounds including a fleet-epoch straddle,
+        # and the §3.11 invariant: resident bytes stay under the lookahead
+        # window bound no matter how big C is
+        from repro.data.paging import ClientDataStore, LookaheadPager
+        from repro.data.pipeline import CohortStream
+        from repro.data.reshuffle import ReshuffleSampler
+
+        n_probe, b_probe = 2, 1
+        dstore = ClientDataStore.create(
+            data_store, clients,
+            {"tokens": jax.ShapeDtypeStruct((n_probe, b_probe, 64),
+                                            jnp.int32)},
+            shard_size=512)
+        pager = LookaheadPager(dstore, lookahead=1)
+        # start 3 rounds before the fleet-epoch boundary so the 8-round
+        # walk crosses it (straddle cohorts deconflict, counts resume
+        # closed-form)
+        start = max(0, clients // m - 3)
+        stream = CohortStream(None, ReshuffleSampler(clients, n_probe,
+                                                     seed=1),
+                              cohorts, paged=pager, start_round=start)
+        with stream:
+            for _ in range(8):
+                fr = next(stream)
+                assert fr.batch["tokens"].shape[0] == m * b_probe
+        bound = pager.resident_bound_nbytes(m)
+        assert pager.resident_nbytes() <= bound, (
+            f"paged resident set {pager.resident_nbytes()}B exceeds the "
+            f"lookahead window bound {bound}B")
+        out["paging"] = {"path": data_store,
+                         "num_shards": dstore.num_shards,
+                         "store_nbytes": dstore.nbytes,
+                         "resident_nbytes": pager.resident_nbytes(),
+                         "resident_bound_nbytes": bound,
+                         **{k: pager.stats()[k]
+                            for k in ("hits", "misses", "evictions")}}
     return out
 
 
@@ -171,6 +211,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                seq_shard: bool = True, probes: bool = True,
                local_steps: int = 1, clients: int | None = None,
                buffer_k: int | None = None, chaos_dropout: float = 0.0,
+               data_store: str | None = None,
                extra_tags: dict | None = None):
     """Lower + compile one (arch, shape, mesh). Returns a result dict.
 
@@ -237,7 +278,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
         result["fleet"] = fleet_smoke(cfg, mesh, agg, clients,
                                       local_steps=local_steps,
                                       buffer_k=buffer_k,
-                                      chaos_dropout=chaos_dropout)
+                                      chaos_dropout=chaos_dropout,
+                                      data_store=data_store)
 
     # 2) depth probes (unrolled) -> affine extrapolation of cost terms
     if probes:
@@ -309,6 +351,13 @@ def main(argv=None):
     ap.add_argument("--chaos-dropout", type=float, default=0.0,
                     help="per-round client dropout probability for the "
                          "async participation probe")
+    ap.add_argument("--data-store", default=None,
+                    help="probe the out-of-core paged-data path: lay a "
+                         "sparse per-client data store under this directory "
+                         "and walk a real paged CohortStream across a "
+                         "fleet-epoch boundary, asserting host residency "
+                         "stays under the lookahead-window bound "
+                         "(DESIGN.md §3.11; train shapes with --clients)")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the unrolled depth probes (report raw scan "
                          "cost terms, which count loop bodies once)")
@@ -333,6 +382,7 @@ def main(argv=None):
                     probes=not args.no_probes, local_steps=args.local_steps,
                     clients=args.clients, buffer_k=args.buffer_k,
                     chaos_dropout=args.chaos_dropout,
+                    data_store=args.data_store,
                     extra_tags={"tag": args.tag} if args.tag else None,
                 )
             except Exception as e:  # a dry-run failure is a sharding bug

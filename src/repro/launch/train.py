@@ -42,6 +42,7 @@ from repro.checkpoint.io import (
 )
 from repro.configs import ARCH_NAMES, get_config, reduced
 from repro.core.dist import CompressedAggregation
+from repro.data.paging import ClientDataStore, LookaheadPager
 from repro.data.pipeline import make_batch_stream, shared_slots_for_step
 from repro.data.reshuffle import ReshuffleSampler
 from repro.data.tokens import synthetic_token_batches
@@ -104,11 +105,13 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
     """The fleet (partial-participation) loop: C-client population, cohort
     of m mesh ranks per round, host state store (DESIGN.md §3.9).
 
-    The synthetic population DATASET is still materialized dense on the
-    host (O(C * n * b * seq) — fine for this driver's demo scales; the
-    per-client shift STATE is what the store keeps O(cohort) on device and
-    mmap-sharded on host). Paging per-client datasets behind the same
-    per-cohort view is the recorded ROADMAP open item.
+    Without --data-store the synthetic population DATASET is materialized
+    dense on the host (O(C * n * b * seq) — fine for demo scales). With
+    --data-store PATH the dataset lives on disk as per-client rows
+    (`repro.data.paging.ClientDataStore`) and each round's cohort pages in
+    through the deterministic lookahead pager — host RSS is bounded by the
+    lookahead window, not the population (DESIGN.md §3.11). Batches are
+    bit-identical either way.
     """
     C = args.clients
     data = {"tokens": np.asarray(synthetic_token_batches(
@@ -127,6 +130,19 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
           f"store {est/1e6:.1f}MB "
           + (f"mmap@{args.store_path}" if args.store_path else "host RAM")
           + " / O(cohort) device")
+
+    pager = None
+    if args.data_store:
+        if os.path.exists(os.path.join(args.data_store, "data_store.json")):
+            dstore = ClientDataStore.open(args.data_store)
+        else:
+            dstore = ClientDataStore.from_stacked(args.data_store, data)
+        pager = LookaheadPager(dstore, state=store)
+        print(f"data store: {dstore.nbytes/1e6:.1f}MB on disk "
+              f"@{args.data_store} ({dstore.num_shards} shards x "
+              f"{dstore.shard_size} clients), resident <= "
+              f"{pager.resident_bound_nbytes(m)/1e6:.1f}MB")
+        data = None
 
     use_async = fleet_is_async(args)
     chaos = chaos_from_args(args)
@@ -155,14 +171,22 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 f"{async_spec} — the participation schedule is part of "
                 "the walk; resume with the same --buffer-k/--late/"
                 "--chaos-* flags")
+        have_ds = None if pager is None else pager.data.spec()
+        if fm.get("data_store") != have_ds:
+            raise SystemExit(
+                f"{args.resume}: checkpointed data-store layout "
+                f"{fm.get('data_store')} does not match this run's "
+                f"{have_ds} — resume with the same --data-store layout "
+                "(page identities derive from it)")
         start_round = fm["round"]
 
     key = jax.random.key(1)
     t0 = time.time()
     with compat.set_mesh(mesh):
         if args.resume:
-            state = restore_fleet_checkpoint(args.resume, abstract,
-                                             shardings, store)
+            state = restore_fleet_checkpoint(
+                args.resume, abstract, shardings, store,
+                data_store=None if pager is None else pager.data)
             print(f"resumed {args.resume} at round {start_round} "
                   f"(fleet epoch {fm['fleet_epoch']})")
         else:
@@ -178,7 +202,7 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 buffer_k=args.buffer_k, late=args.late,
                 discount=args.discount, chaos=chaos,
                 local_steps=args.local_steps, prefetch=args.prefetch,
-                start_round=start_round)
+                start_round=start_round, paged=pager)
             print(f"async: buffer K={runner._planner.buffer_k}/{m} "
                   f"late={args.late} chaos={chaos.spec()}")
         else:
@@ -186,7 +210,7 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 jitted, abstract, shardings, batch_sh, agg=agg, mesh=mesh,
                 data=data, sampler=sampler, cohorts=cohorts, store=store,
                 local_steps=args.local_steps, prefetch=args.prefetch,
-                start_round=start_round)
+                start_round=start_round, paged=pager)
 
         def log(t, _state, metrics):
             if t % args.log_every == 0 or t == args.steps - 1:
@@ -208,7 +232,8 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 save_fleet_checkpoint(
                     args.checkpoint, jax.device_get(state), store,
                     step=int(state.step),
-                    meta={"fleet": runner.checkpoint_meta()})
+                    meta={"fleet": runner.checkpoint_meta()},
+                    data_store=None if pager is None else pager.data)
                 print(f"fleet checkpoint -> {args.checkpoint} "
                       f"(round {runner.round})")
 
@@ -281,6 +306,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="base seconds for exponential retry backoff")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="seed every fault draw derives from")
+    ap.add_argument("--data-store", default=None,
+                    help="page the fleet population's DATASETS from disk: "
+                         "lay them out as per-client rows in sharded memmap "
+                         "files under this directory (built on first run, "
+                         "reused if present) and stream each cohort through "
+                         "the deterministic lookahead pager — host RSS is "
+                         "bounded by the lookahead window, batches are "
+                         "bit-identical to the in-RAM path (DESIGN.md §3.11)")
     ap.add_argument("--store-path", default=None,
                     help="back the fleet client-state store with np.memmap "
                          "shards under this directory (zero pages cost "

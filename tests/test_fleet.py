@@ -201,6 +201,17 @@ def test_store_rejects_bad_cohorts():
     got = store.gather(np.array([0, 1]))
     with pytest.raises(ValueError, match="cohort slice"):
         store.scatter(np.array([0, 1, 2]), got)
+    # regression: an UNSORTED cohort with out-of-range ids must get the
+    # bounds error NAMING the bad ids, not a misleading sortedness
+    # complaint (the old check looked only at cohort[0]/cohort[-1], which
+    # both pass for e.g. [9, 2] — then blamed the ordering)
+    with pytest.raises(ValueError, match=r"outside \[0, 8\): \[9\]"):
+        store.gather(np.array([9, 2]))
+    with pytest.raises(ValueError, match=r"\[-3, 11\]"):
+        store.gather(np.array([-3, 11]))
+    # many offenders: first 8 shown, the rest counted
+    with pytest.raises(ValueError, match=r"\(\+2 more\)"):
+        store.gather(np.arange(10) + 8)
 
 
 # ---------------------------------------------------------------------------
@@ -739,6 +750,100 @@ def test_async_planner_may_defer_matrix_and_validation():
         ChaosConfig(delay=-0.5)
 
 
+def test_async_planner_on_time_metric_regression():
+    """`on_time` must come from the plan (`alive & (latency <= deadline)`),
+    NOT from thresholding the normalized weights: the m/sum(w) rescale
+    exceeds 1.0 whenever any client is late or dark, so at late='discount'
+    with discount=1.0 a small-staleness late report's weight crosses 1.0
+    and the weight-threshold count claims a LATE client was on time."""
+    m = 4
+    planner = AsyncPlanner(
+        m, buffer_k=2, late="discount", discount=1.0,
+        chaos=ChaosConfig(dropout=0.3, straggler=0.5, delay=0.2, seed=7))
+    cohort = np.arange(m)
+    miscounted = []
+    for r in range(100):
+        plan = planner(r, cohort)
+        # the plan's on_time is definitionally alive-and-within-deadline
+        assert np.array_equal(plan.on_time,
+                              ~np.isinf(plan.latency)
+                              & (plan.latency <= plan.deadline))
+        if int((plan.weights >= 1.0).sum()) != int(plan.on_time.sum()):
+            miscounted.append(r)
+            # every miscount is a LATE/dark-rescaled weight >= 1, never a
+            # missing on-time client
+            assert ((plan.weights >= 1.0) & ~plan.on_time).any()
+    assert 4 in miscounted, "seed 7 round 4 is the pinned repro"
+    assert len(miscounted) > 10, "the miscount is systematic, not a fluke"
+    # clean synchronous round: all weights exactly 1.0 AND all on time —
+    # the two counts agree, which is why the bug stayed invisible
+    clean = AsyncPlanner(m)(0, cohort)
+    assert clean.on_time.all() and (clean.weights == 1.0).all()
+    # zero-alive rounds report nobody on time
+    dead = AsyncPlanner(
+        m, chaos=ChaosConfig(dropout=0.99, seed=1))
+    for r in range(200):
+        plan = dead(r, cohort)
+        if not (~np.isinf(plan.latency)).any():
+            assert not plan.on_time.any()
+            break
+    else:
+        pytest.fail("dropout=0.99 over 200 rounds must kill one round")
+
+
+def test_faulty_store_injects_cursor_and_bit_writes():
+    """Chaos store-fail coverage includes `advance`/`add_bits` (the cursor
+    and bit writes), not just gather/scatter: they draw from the SAME
+    (seed, call-index) stream, injection happens BEFORE the op (a failed
+    advance leaves cursors untouched), and `touch`/`as_tree` still
+    delegate uninjected (prefetch warming and checkpoint reads must not
+    perturb the I/O schedule)."""
+    from repro.core.rules import get_rule
+
+    store = ClientStateStore.create(_params(), 6, get_rule("single"),
+                                    shard_size=3)
+    chaos = ChaosConfig(store_fail=0.5, seed=3)
+    cohort = np.array([0, 1])
+
+    def pattern(fs, op, ops=30):
+        out = []
+        for _ in range(ops):
+            try:
+                op(fs)
+                out.append(False)
+            except TransientStoreError:
+                out.append(True)
+        return out
+
+    pat_adv = pattern(FaultyStore(store, chaos), lambda fs: fs.advance(cohort, 1))
+    assert any(pat_adv) and not all(pat_adv)
+    # same call-index stream: add_bits at the same indices fails identically
+    assert pattern(FaultyStore(store, chaos),
+                   lambda fs: fs.add_bits(cohort, 8.0)) == pat_adv
+    # inject-before-op atomicity: a failing advance never moved the cursor
+    store.cursor[...] = 0
+    store.bits[...] = 0.0
+    fs = FaultyStore(store, chaos)
+    applied = 0
+    for _ in range(30):
+        try:
+            fs.advance(cohort, 1)
+            applied += 1
+        except TransientStoreError:
+            assert store.cursor[cohort].min() == applied, \
+                "a failed advance must not move the cursor"
+    assert (store.cursor[cohort] == applied).all()
+    # the fresh wrapper replays the same schedule: failures line up
+    assert 30 - applied == sum(pat_adv)
+    # uninjected delegation: warming + checkpoint reads never fault and
+    # never consume a call index
+    before = fs.injected_failures
+    for _ in range(50):
+        fs.touch(cohort)
+        fs.as_tree()
+    assert fs.injected_failures == before
+
+
 def test_faulty_store_deterministic_and_atomic():
     """Injected store failures are a pure function of (seed, call index):
     a replay reproduces the exact failure schedule. Injection happens
@@ -939,9 +1044,12 @@ def test_async_fleet_resume_under_chaos_bit_exact(mesh_4x2, tmp_path):
         store = mk_store()
         runner = mk_runner(0, store)
         losses_a = []
+        on_time_a = {}
 
         def snap(t, st, metrics):
             losses_a.append(trace(metrics))
+            if "on_time" in metrics:
+                on_time_a[t] = metrics["on_time"]
             if t + 1 == cut:
                 save_fleet_checkpoint(path, jax.device_get(st), store,
                                       step=t + 1,
@@ -980,6 +1088,21 @@ def test_async_fleet_resume_under_chaos_bit_exact(mesh_4x2, tmp_path):
     # under drop + dropout some clients must sit below the full walk
     assert ref_store.cursor.sum() < \
         CohortSampler(C, m, seed=9).participation_counts(total).sum()
+    # with advance/add_bits inside the injected+retried I/O set, the
+    # chaos run's cursors must STILL equal the closed-form planner replay
+    # of the walk — an injected-but-unretried cursor write would drift
+    cohorts = CohortSampler(C, m, seed=9)
+    planner = AsyncPlanner(m, buffer_k=3, late="drop", chaos=chaos)
+    replay = np.zeros(C, np.int64)
+    for t in range(total):
+        cohort = cohorts.cohort_for_round(t)
+        plan = planner(t, cohort)
+        replay[cohort[plan.completes]] += 1
+        if t in on_time_a:
+            # driver metric == plan truth (the weight-threshold count
+            # overstated it whenever a late weight rescaled past 1.0)
+            assert on_time_a[t] == int(plan.on_time.sum()), t
+    assert np.array_equal(ref_store.cursor, replay)
 
 
 @needs_mesh
