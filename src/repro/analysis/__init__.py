@@ -1,0 +1,35 @@
+"""repro.analysis — static invariant enforcement (DESIGN.md §3.12).
+
+Two layers, one CLI (``python -m repro.analysis --lint --graph``):
+
+layer 1 — AST linter (`lint`, `checkers/`)
+    Pure-AST checkers for the repo's prose invariants: RNG purity and salt
+    hygiene, ignored semantic arguments, bit accounting, backend-only kernel
+    imports, trace hazards. Never imports jax — fast enough for pre-commit.
+
+layer 2 — jaxpr census (`graph`)
+    Traces the real train steps (no device execution) and checks what the
+    lint layer can't see from source: collective-op counts and payload bytes
+    against the analytic wire model, dtype promotion, buffer donation, and
+    the elastic step's weight-invariant jaxpr.
+
+Keep this module import-light: importing `repro.analysis` must not import
+jax (the graph layer is imported lazily by the CLI after XLA_FLAGS is set).
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import (
+    Finding,
+    apply_baseline,
+    load_baseline,
+)
+from repro.analysis.lint import lint_paths, lint_source, rule_catalog
+
+__all__ = [
+    "Finding",
+    "apply_baseline",
+    "load_baseline",
+    "lint_paths",
+    "lint_source",
+    "rule_catalog",
+]

@@ -1,0 +1,111 @@
+"""CLI driver: ``python -m repro.analysis --lint --graph [--baseline FILE]``.
+
+Exit status is the contract CI gates on: 0 iff every finding is covered by
+the checked-in baseline (which the repo ships EMPTY — suppressions need a
+written reason, and stale ones are themselves findings).
+
+``--lint`` runs without importing jax. ``--graph`` imports jax lazily,
+*after* forcing 8 host devices via XLA_FLAGS, so the census can trace
+multi-pod meshes on any machine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import Finding, apply_baseline, load_baseline
+from repro.analysis.lint import lint_paths, rule_catalog
+
+_DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three parents above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro invariant analysis: AST lint + jaxpr wire census")
+    parser.add_argument("--lint", action="store_true",
+                        help="run the layer-1 AST checkers over src/repro")
+    parser.add_argument("--graph", action="store_true",
+                        help="run the layer-2 jaxpr census (traces the train "
+                             "steps; no device execution)")
+    parser.add_argument("--baseline", default=None,
+                        help="suppression baseline JSON (default: "
+                             f"{_DEFAULT_BASELINE} at the repo root, if "
+                             "present)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as JSON records")
+    parser.add_argument("--rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files/dirs to lint (default: src/repro)")
+    args = parser.parse_args(argv)
+
+    if args.rules:
+        for rule, doc in sorted(rule_catalog().items()):
+            print(f"{rule:26s} {doc}")
+        return 0
+
+    if not (args.lint or args.graph):
+        parser.error("nothing to do: pass --lint and/or --graph")
+
+    root = _repo_root()
+    findings: list[Finding] = []
+
+    if args.lint:
+        paths = args.paths or [root / "src" / "repro"]
+        findings.extend(lint_paths(paths, repo_root=root))
+
+    if args.graph:
+        # Force a fixed 8-device host topology BEFORE jax initializes, so
+        # the census meshes are constructible on a 1-CPU CI runner.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count=8".strip())
+        from repro.analysis import graph
+
+        findings.extend(graph.run_census())
+
+    baseline_path = args.baseline
+    if baseline_path is None:
+        default = root / _DEFAULT_BASELINE
+        baseline_path = str(default) if default.exists() else None
+    if baseline_path is not None:
+        try:
+            entries = load_baseline(baseline_path)
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            findings.append(Finding(
+                file=str(baseline_path), line=0, rule="bad-baseline",
+                message=str(e)))
+        else:
+            findings = apply_baseline(findings, entries,
+                                      baseline_file=str(baseline_path))
+
+    if args.json:
+        print(json.dumps([f.to_json() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f)
+
+    if findings:
+        n = len(findings)
+        print(f"\n{n} finding{'s' if n != 1 else ''} "
+              "(suppress via inline allow with rationale, or the baseline)",
+              file=sys.stderr)
+        return 1
+    mode = "+".join(m for m, on in [("lint", args.lint),
+                                    ("graph", args.graph)] if on)
+    print(f"analysis clean ({mode})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+"""The invariant checkers (layer 1 of repro.analysis).
+
+Each module exports ``check(module) -> list[Finding]`` and a ``RULES``
+dict documenting its rule ids. Checkers are pure AST passes — no jax
+import, no file IO — so the lint layer stays fast enough for CI and for
+pre-commit use.
+"""
+from __future__ import annotations
+
+from repro.analysis.checkers import args, bits, kernels, rng, trace
+
+ALL_CHECKERS = (
+    rng.check,
+    args.check,
+    bits.check,
+    kernels.check,
+    trace.check,
+)
+
+RULE_DOCS = [rng.RULES, args.RULES, bits.RULES, kernels.RULES, trace.RULES]

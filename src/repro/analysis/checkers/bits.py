@@ -1,0 +1,65 @@
+"""Bit-accounting arithmetic outside the compensated helper — PR 4 bug class.
+
+``bits-accounting``
+    Direct ``+``/``-`` arithmetic on a ``bits`` / ``bits_lo`` accumulator
+    anywhere except ``repro.core.api`` (where ``accumulate_bits`` owns the
+    Kahan/compensated-summation update). PR 4's regression was exactly this:
+    a plain f32 ``state.bits + inc`` stalls once the running total crosses
+    ~2^24 (f32 integer gap exceeds the per-round increment) and the reported
+    communication cost silently flatlines. Any new accumulation site must go
+    through ``api.accumulate_bits`` so the ``(bits, bits_lo)`` pair stays
+    compensated.
+
+    Host-side Python accumulators (float64: 53-bit mantissa, no stall at
+    realistic totals) are legitimate — annotate them with
+    ``# analysis: allow[bits-accounting] <why compensation is unnecessary>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "bits-accounting":
+        "arithmetic on a bits/bits_lo accumulator outside "
+        "repro.core.api.accumulate_bits (the PR 4 f32-stall bug class)",
+}
+
+_ACCUMULATOR_NAMES = {"bits", "bits_lo"}
+_ALLOWED_MODULE = "core/api.py"
+
+
+def _is_bits(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in _ACCUMULATOR_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in _ACCUMULATOR_NAMES
+    if isinstance(node, ast.Subscript):
+        return _is_bits(node.value)
+    return False
+
+
+def check(module) -> list[Finding]:
+    rel = module.rel.replace("\\", "/")
+    if rel.endswith(_ALLOWED_MODULE):
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            if _is_bits(node.left) or _is_bits(node.right):
+                out.append(Finding(
+                    file=module.rel, line=node.lineno, rule="bits-accounting",
+                    message="plain add/sub on a bits accumulator — route it "
+                            "through api.accumulate_bits (f32 totals stall "
+                            "past ~2^24; the PR 4 bug)"))
+        elif isinstance(node, ast.AugAssign) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            if _is_bits(node.target):
+                out.append(Finding(
+                    file=module.rel, line=node.lineno, rule="bits-accounting",
+                    message="augmented add/sub on a bits accumulator — route "
+                            "it through api.accumulate_bits (f32 totals "
+                            "stall past ~2^24; the PR 4 bug)"))
+    return out

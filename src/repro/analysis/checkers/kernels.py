@@ -1,0 +1,52 @@
+"""Backend-only kernel imports.
+
+``kernel-import``
+    `repro.kernels.*` holds Pallas kernels plus their interpret-mode
+    fallbacks; `repro.compression.backend` is the dispatch layer that picks
+    between them and re-exports the stable symbols (geometry constants
+    included). Any other module importing `repro.kernels.*` directly couples
+    itself to one backend's internals — exactly how `core/dist.py` ended up
+    reaching into `kernels.randk` for `BLOCK_ROWS` — and silently bypasses
+    the dispatch policy (interpret-vs-compiled, future TPU specialization).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "kernel-import":
+        "repro.kernels.* imported outside the kernels package and the "
+        "compression backend dispatch layer",
+}
+
+_ALLOWED_PREFIXES = ("repro/kernels/", "repro/compression/")
+
+
+def _allowed(rel: str) -> bool:
+    rel = rel.replace("\\", "/")
+    return any(f"/{p}" in f"/{rel}" for p in _ALLOWED_PREFIXES)
+
+
+def check(module) -> list[Finding]:
+    if _allowed(module.rel):
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(module.tree):
+        target = ""
+        if isinstance(node, ast.Import):
+            hit = [a.name for a in node.names
+                   if a.name.split(".")[:2] == ["repro", "kernels"]]
+            target = hit[0] if hit else ""
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module.split(".")[:2] == ["repro", "kernels"]:
+                target = node.module
+        if target:
+            out.append(Finding(
+                file=module.rel, line=node.lineno, rule="kernel-import",
+                message=f"direct import of {target} — go through "
+                        "repro.compression.backend, the dispatch layer that "
+                        "owns backend selection and re-exports the stable "
+                        "kernel surface"))
+    return out

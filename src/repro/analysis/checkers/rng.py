@@ -1,0 +1,115 @@
+"""RNG purity: structured entropy tuples + named salts (DESIGN.md §3.12).
+
+Two rules:
+
+``rng-unstructured-seed``
+    Every `np.random.default_rng(...)` must be seeded with a structured
+    entropy tuple of >= 2 components — `(seed, salt)` for one-shot
+    synthesis, `(seed, salt, round/epoch)` (or `(seed, epoch)` with
+    stream-disjoint tuple shapes) for per-round draws — never a bare
+    integer, and never unseeded. Bare `jax.random.key` / `PRNGKey`
+    construction outside `repro.core.salts` is the same violation: root
+    keys come from `salts.root_key(seed, salt)` so equal integer seeds
+    in different subsystems still yield disjoint key trees. Legacy global
+    numpy streams (`np.random.seed/rand/...`) are flagged unconditionally.
+
+``rng-literal-salt``
+    Numeric salt literals — inside an entropy tuple, as a `fold_in` stream
+    separator, or assigned to a `*_SALT` name — must live in the
+    `repro.core.salts` registry, where uniqueness is checked at import.
+    A literal anywhere else can silently collide with an existing stream.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.checkers.base import dotted, is_int_literal
+from repro.analysis.findings import Finding
+
+RULES = {
+    "rng-unstructured-seed":
+        "RNG/key construction must derive from a structured "
+        "(seed, salt, round/epoch) tuple (np) or salts.root_key (jax)",
+    "rng-literal-salt":
+        "numeric salt literals belong in the repro.core.salts registry",
+}
+
+_SALTS_MODULE = "core/salts.py"
+_NP_GLOBAL_DRAWS = {
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "permutation", "choice", "shuffle", "uniform", "normal", "integers",
+}
+
+
+def _is_salts_module(rel: str) -> bool:
+    return rel.replace("\\", "/").endswith(_SALTS_MODULE)
+
+
+def _check_default_rng(node: ast.Call, rel: str, out: list[Finding]) -> None:
+    if not node.args and not node.keywords:
+        out.append(Finding(
+            file=rel, line=node.lineno, rule="rng-unstructured-seed",
+            message="default_rng() without a seed is OS-entropy — every "
+                    "draw must be a pure function of (seed, salt, round)"))
+        return
+    arg = node.args[0] if node.args else node.keywords[0].value
+    if not isinstance(arg, ast.Tuple) or len(arg.elts) < 2:
+        out.append(Finding(
+            file=rel, line=node.lineno, rule="rng-unstructured-seed",
+            message="default_rng seed is not a structured entropy tuple — "
+                    "pass (seed, salt[, round/epoch]) so streams can't "
+                    "alias across subsystems"))
+        return
+    for elt in arg.elts:
+        if is_int_literal(elt):
+            out.append(Finding(
+                file=rel, line=elt.lineno, rule="rng-literal-salt",
+                message=f"literal salt {elt.value:#x} in an entropy tuple — "
+                        "use a named constant from repro.core.salts"))
+
+
+def check(module) -> list[Finding]:
+    out: list[Finding] = []
+    rel = module.rel
+    in_salts = _is_salts_module(rel)
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            base = name.rsplit(".", 1)[-1] if name else ""
+            if base == "default_rng" and (name == "default_rng"
+                                          or ".random." in f".{name}"):
+                _check_default_rng(node, rel, out)
+            elif (name.endswith("random.key") or base == "PRNGKey") \
+                    and not in_salts:
+                out.append(Finding(
+                    file=rel, line=node.lineno, rule="rng-unstructured-seed",
+                    message=f"bare {base}(...) root-key construction — "
+                            "derive it via repro.core.salts.root_key"
+                            "(seed, salt) so key trees are salted apart"))
+            elif base == "fold_in" and len(node.args) >= 2 and not in_salts:
+                salt = node.args[1]
+                literal = is_int_literal(salt) or (
+                    isinstance(salt, ast.BinOp)
+                    and (is_int_literal(salt.left)
+                         or is_int_literal(salt.right)))
+                if literal:
+                    out.append(Finding(
+                        file=rel, line=node.lineno, rule="rng-literal-salt",
+                        message="literal fold_in stream separator — register "
+                                "a named salt in repro.core.salts"))
+            elif name.startswith(("np.random.", "numpy.random.")) \
+                    and base in _NP_GLOBAL_DRAWS:
+                out.append(Finding(
+                    file=rel, line=node.lineno, rule="rng-unstructured-seed",
+                    message=f"global numpy stream np.random.{base} — draws "
+                            "are not a pure function of (seed, salt, round)"))
+        elif isinstance(node, ast.Assign) and not in_salts:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and "SALT" in tgt.id.upper() \
+                        and is_int_literal(node.value):
+                    out.append(Finding(
+                        file=rel, line=node.lineno, rule="rng-literal-salt",
+                        message=f"salt constant {tgt.id} defined outside the "
+                                "repro.core.salts registry — uniqueness is "
+                                "unchecked here"))
+    return out

@@ -1,0 +1,179 @@
+"""Host-side hazards inside trace-reachable functions.
+
+``trace-hazard``
+    Wall-clock reads (``time.time()``/``perf_counter()``/...), global numpy
+    draws, ``.item()`` materialization, and ``float()``/``int()``/``bool()``
+    on tracer-producing expressions are all host-side operations. Inside a
+    function that jax traces (jit / shard_map / vmap / grad / scan /
+    eval_shape), they either crash (``ConcretizationTypeError``) or — worse —
+    bake a single host value into the compiled program, so every subsequent
+    step silently replays the value captured at trace time.
+
+    Reachability is a module-local over-approximation: functions passed to /
+    decorated by a tracing entry point are roots, and any module-level
+    function called by bare name from a traced function is traced too.
+    Cross-module reachability is handled by listing the modules whose whole
+    public surface runs under trace (``TRACED_MODULES``) — the wire regions,
+    rules, algorithms, models, optimizers, and kernels.
+
+    Host-side code that must live in a traced *module* (e.g. setup helpers)
+    carries ``# analysis: allow[trace-hazard] <why this never runs under
+    trace>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.checkers.base import dotted
+from repro.analysis.findings import Finding
+
+RULES = {
+    "trace-hazard":
+        "host-side operation (wall clock, global numpy RNG, .item(), "
+        "float()-on-tracer) inside a trace-reachable function",
+}
+
+# Modules whose function surface is (transitively) traced: the wire regions
+# and everything they call. Matched as a path suffix of the repo-relative
+# file. Keep in sync with DESIGN.md §3.12.
+TRACED_MODULES = (
+    "repro/core/dist.py",
+    "repro/core/rules.py",
+    "repro/core/api.py",
+    "repro/core/algorithms.py",
+    "repro/compression/backend.py",
+    "repro/compression/ops.py",
+    "repro/models/transformer.py",
+    "repro/models/layers.py",
+    "repro/models/moe.py",
+    "repro/models/mixers.py",
+    "repro/models/linear_attention.py",
+    "repro/optim/optimizers.py",
+    "repro/kernels/",
+)
+
+# Call targets that make their function-argument (or decorated function) a
+# trace root.
+_TRACE_ENTRY_POINTS = {
+    "jit", "shard_map", "manual", "vmap", "pmap", "grad", "value_and_grad",
+    "scan", "eval_shape", "make_jaxpr", "checkpoint", "remat", "pallas_call",
+    "fori_loop", "while_loop", "cond", "switch",
+}
+
+_CLOCK_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+    "time.perf_counter_ns", "time.monotonic_ns", "datetime.now",
+    "datetime.datetime.now", "datetime.utcnow",
+}
+
+_CASTS = {"float", "int", "bool", "complex"}
+
+
+def _in_traced_module(rel: str) -> bool:
+    rel = "/" + rel.replace("\\", "/")
+    return any(f"/{m}" in rel for m in TRACED_MODULES)
+
+
+def _module_functions(tree: ast.Module) -> dict[str, ast.AST]:
+    fns: dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fns[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fns.setdefault(item.name, item)
+    return fns
+
+
+def _trace_roots(tree: ast.Module, fns: dict[str, ast.AST]) -> set[str]:
+    """Function names handed to (or decorated by) a tracing entry point."""
+    roots: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            base = dotted(node.func).rsplit(".", 1)[-1]
+            if base in _TRACE_ENTRY_POINTS:
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in fns:
+                        roots.add(arg.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if dotted(target).rsplit(".", 1)[-1] in _TRACE_ENTRY_POINTS:
+                    roots.add(node.name)
+    return roots
+
+
+def _reachable(fns: dict[str, ast.AST], roots: set[str]) -> set[str]:
+    """Fixpoint of bare-name calls from traced functions to module defs."""
+    reached = set(roots)
+    frontier = list(roots)
+    while frontier:
+        fn = fns.get(frontier.pop())
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                callee = node.func.id
+                if callee in fns and callee not in reached:
+                    reached.add(callee)
+                    frontier.append(callee)
+    return reached
+
+
+def _contains_tracer_math(node: ast.AST) -> bool:
+    """Heuristic: the expression subtree calls into jnp./jax./lax. —
+    so casting its value to a Python scalar forces a tracer."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted(sub.func)
+            if name.startswith(("jnp.", "jax.", "lax.")):
+                return True
+    return False
+
+
+def _hazards(fn: ast.AST, rel: str) -> list[Finding]:
+    out: list[Finding] = []
+    seen: set[tuple[int, str]] = set()
+
+    def emit(line: int, message: str) -> None:
+        if (line, message) not in seen:
+            seen.add((line, message))
+            out.append(Finding(file=rel, line=line, rule="trace-hazard",
+                               message=message))
+
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        base = name.rsplit(".", 1)[-1] if name else ""
+        if name in _CLOCK_CALLS:
+            emit(node.lineno,
+                 f"{name}() under trace bakes the trace-time clock value "
+                 "into the compiled program")
+        elif name.startswith(("np.random.", "numpy.random.")):
+            emit(node.lineno,
+                 f"{name}() under trace draws once at trace time and "
+                 "replays the same value every step")
+        elif isinstance(node.func, ast.Attribute) and base == "item" \
+                and not node.args:
+            emit(node.lineno,
+                 ".item() forces a device sync / fails on tracers")
+        elif isinstance(node.func, ast.Name) and base in _CASTS \
+                and node.args and _contains_tracer_math(node.args[0]):
+            emit(node.lineno,
+                 f"{base}() on a tracer-producing expression raises "
+                 "ConcretizationTypeError under trace")
+    return out
+
+
+def check(module) -> list[Finding]:
+    fns = _module_functions(module.tree)
+    if _in_traced_module(module.rel):
+        traced = set(fns)
+    else:
+        traced = _reachable(fns, _trace_roots(module.tree, fns))
+    out: list[Finding] = []
+    for name in sorted(traced):
+        out.extend(_hazards(fns[name], module.rel))
+    return out

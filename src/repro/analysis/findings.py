@@ -1,0 +1,106 @@
+"""Finding records + the checked-in suppression baseline (DESIGN.md §3.12).
+
+A finding is a structured record — rule id, repo-relative file, 1-based
+line, message — never free text, so CI can gate on the exact set and the
+baseline can suppress a *specific* (rule, file) pair with a recorded reason.
+
+Suppression has two layers, both explicit and both self-checking:
+
+inline allow annotations
+    ``# analysis: allow[rule-a,rule-b] rationale`` on the offending line
+    (or the ``def`` line for function-level rules). The rationale is
+    REQUIRED — an allow without one is itself a finding
+    (``allow-missing-rationale``), and an allow that suppresses nothing is a
+    finding too (``stale-allow``), so annotations can't rot in place.
+
+baseline file (``analysis_baseline.json``)
+    ``{"suppressions": [{"rule", "file", "reason"}, ...]}`` — the escape
+    hatch for findings that can't carry an inline comment (e.g. jaxpr-census
+    findings, whose "file" is a trace label). Entries need a non-empty
+    reason and must match at least one live finding, or they are reported as
+    ``stale-baseline`` — the committed baseline is kept honest the same way
+    the annotations are. The repo ships an EMPTY baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+META_RULES = {
+    "allow-missing-rationale":
+        "an `# analysis: allow[...]` annotation must state why",
+    "stale-allow":
+        "an allow annotation that no longer suppresses any finding",
+    "stale-baseline":
+        "a baseline suppression that no longer matches any finding",
+    "bad-baseline":
+        "the baseline file is malformed (not the documented schema)",
+}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One invariant violation: where, which rule, and what it means."""
+
+    file: str  # repo-relative posix path, or a trace label (jaxpr:...)
+    line: int  # 1-based; 0 for whole-file / graph-level findings
+    rule: str  # kebab-case id from the rule catalog
+    message: str
+
+    def __str__(self) -> str:
+        loc = f"{self.file}:{self.line}" if self.line else self.file
+        return f"{loc}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def load_baseline(path: str | Path) -> list[dict]:
+    """Parse the baseline file into its suppression entries.
+
+    Raises ValueError on schema violations (a malformed baseline must fail
+    the run loudly, not silently suppress nothing)."""
+    raw = json.loads(Path(path).read_text())
+    if not isinstance(raw, dict) or "suppressions" not in raw:
+        raise ValueError(
+            f"{path}: baseline must be an object with a 'suppressions' list")
+    entries = raw["suppressions"]
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: 'suppressions' must be a list")
+    for e in entries:
+        if not (isinstance(e, dict) and e.get("rule") and e.get("file")):
+            raise ValueError(
+                f"{path}: each suppression needs 'rule' and 'file': {e!r}")
+        if not str(e.get("reason", "")).strip():
+            raise ValueError(
+                f"{path}: suppression of [{e['rule']}] in {e['file']} has "
+                "no 'reason' — baselined findings must be justified")
+    return entries
+
+
+def apply_baseline(findings: list[Finding],
+                   entries: list[dict],
+                   baseline_file: str = "analysis_baseline.json",
+                   ) -> list[Finding]:
+    """Drop findings matched by baseline entries; flag unused entries.
+
+    A suppression matches every finding with its (rule, file) pair — line
+    numbers are deliberately not part of the match so an unrelated edit
+    above a baselined finding doesn't resurrect it.
+    """
+    out, used = [], [False] * len(entries)
+    for f in findings:
+        hit = False
+        for i, e in enumerate(entries):
+            if e["rule"] == f.rule and e["file"] == f.file:
+                used[i] = hit = True
+        if not hit:
+            out.append(f)
+    for e, u in zip(entries, used):
+        if not u:
+            out.append(Finding(
+                file=baseline_file, line=0, rule="stale-baseline",
+                message=f"suppression of [{e['rule']}] in {e['file']} "
+                        "matches no finding — delete it"))
+    return sorted(out)

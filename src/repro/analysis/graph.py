@@ -1,0 +1,244 @@
+"""Layer-2 jaxpr census: trace the real train steps, audit the wire
+(DESIGN.md §3.12).
+
+The AST linter can't see what a program compiles TO. This layer traces
+`launch.steps.make_train_step` for every wire method on a flat and a 2-pod
+mesh — `jit(...).trace` / `.lower` only, no device execution — and checks
+the compiled artifact against the repo's analytic claims:
+
+collective census
+    Inside the fully-manual shard_map wire regions only EXPLICIT collectives
+    exist (GSPMD inserts its comms later, invisibly to the jaxpr), so the
+    psum equations ARE the wire. Per level (axis names distinguish the
+    intra-pod exchange over "data" from the inter-pod one over "pod") the
+    census must show exactly L psums — one per parameter leaf — and their
+    payload bytes must equal `CompressedAggregation.wire_bytes_per_round`
+    exactly. The CLI runs TP=1 meshes ((4,1) and (2,2,1)): per-device jaxpr
+    payloads divide the lane (cols) dimension by the model-axis size, while
+    the analytic model counts a client's full contribution, so byte EQUALITY
+    holds only at TP=1 (the f32-lane caveat: on TP>1 meshes compare counts,
+    or scale by the model-axis factor — tests/test_analysis.py does the
+    former).
+
+dtype audit
+    No float64 anywhere in the traced program (a silent x64 promotion would
+    double every wire payload), and the output state's leaf dtypes must
+    equal the input state's (a promotion inside the step would break
+    donation silently before it broke numerics).
+
+donation audit
+    The step donates its input state (`donate_argnums=(0,)`); every state
+    leaf must actually alias an output buffer in the lowered StableHLO
+    (`tf.aliasing_output`). A dtype/shape mismatch makes XLA silently drop
+    the alias and double peak memory.
+
+elastic invariant
+    The elastic step's participation-weights vector must be a live runtime
+    input of the jaxpr — consumed by the program, never constant-folded —
+    which is the single-compile guarantee: cohorts can shrink/grow without
+    retracing.
+
+Everything here must be importable only AFTER XLA_FLAGS forces >= 8 host
+devices (the CLI driver does this; tests inherit conftest's env).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "census-collective-count":
+        "psum count per wire level != one per parameter leaf",
+    "census-collective-bytes":
+        "psum payload bytes != the analytic wire_bytes_per_round",
+    "census-unexpected-collective":
+        "a collective over axes no wire level owns (e.g. 'model')",
+    "census-dtype-promotion":
+        "float64 in the traced step, or state dtype changed in flight",
+    "census-donation":
+        "a donated state buffer is not aliased in the lowered program",
+    "census-elastic-invariant":
+        "the elastic weights vector is not a live jaxpr input",
+}
+
+# Census points: every wire method on both topologies. TP=1 so payload
+# bytes match the analytic model exactly (see module docstring).
+CENSUS_METHODS = ("q", "diana", "diana_rr", "ef")
+CENSUS_MESHES = (
+    ("flat", (4, 1), ("data", "model")),
+    ("two_pod", (2, 2, 1), ("pod", "data", "model")),
+)
+
+
+def _iter_jaxprs(jaxpr):
+    """The jaxpr and every sub-jaxpr nested in its equation params."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for vv in v if isinstance(v, (list, tuple)) else (v,):
+                inner = getattr(vv, "jaxpr", vv)
+                if hasattr(inner, "eqns"):
+                    yield from _iter_jaxprs(inner)
+
+
+def collective_census(jaxpr) -> dict[tuple[str, ...], tuple[int, int]]:
+    """{psum axes -> (eqn count, payload bytes)} over all nested jaxprs."""
+    out: dict[tuple[str, ...], tuple[int, int]] = {}
+    for jx in _iter_jaxprs(jaxpr):
+        for eqn in jx.eqns:
+            if eqn.primitive.name != "psum":
+                continue
+            axes = tuple(eqn.params.get("axes", ()))
+            nbytes = sum(
+                int(np.prod(v.aval.shape)) * v.aval.dtype.itemsize
+                for v in eqn.invars)
+            c, b = out.get(axes, (0, 0))
+            out[axes] = (c + 1, b + nbytes)
+    return out
+
+
+def has_float64(jaxpr) -> bool:
+    for jx in _iter_jaxprs(jaxpr):
+        for eqn in jx.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "dtype", None) is not None:
+                    if str(aval.dtype) == "float64":
+                        return True
+    return False
+
+
+def _trace_step(cfg, mesh, method: str, *, elastic: bool = False,
+                fraction: float = 0.25):
+    """Build + trace one train step; returns everything the checks need."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dist import CompressedAggregation
+    from repro.launch import compat, steps
+    from repro.launch.mesh import num_clients
+
+    agg0 = CompressedAggregation(method=method, wire="shared",
+                                 fraction=fraction,
+                                 shift_dtype=jnp.float32)
+    jitted, abstract, _, _ = steps.make_train_step(
+        cfg, mesh, agg=agg0, remat=False, seq_shard=False, elastic=elastic)
+    agg = steps.configure_agg(agg0, mesh, 1)
+    m = num_clients(mesh)
+    batch = {"tokens": jax.ShapeDtypeStruct((2 * m, cfg.max_seq + 1),
+                                            jnp.int32)}
+    # round-key argument: abstract typed-key scalar (eval_shape never
+    # materializes a key, so this is not a root-key construction site)
+    key = jax.ShapeDtypeStruct((), jax.eval_shape(jax.random.key, 0).dtype)
+    extra = []
+    if agg.rule.slotted:
+        extra.append(jax.ShapeDtypeStruct((1,), jnp.int32))
+    if elastic:
+        extra.append(jax.ShapeDtypeStruct((m,), jnp.float32))
+    with compat.set_mesh(mesh):
+        traced = jitted.trace(abstract, batch, key, *extra)
+        lowered = jitted.lower(abstract, batch, key, *extra)
+    return traced, lowered, abstract, agg
+
+
+def check_step(cfg, mesh, method: str, label: str) -> list[Finding]:
+    """All census checks for one (mesh, method) point."""
+    import jax
+
+    traced, lowered, abstract, agg = _trace_step(cfg, mesh, method)
+    where = f"jaxpr:{label}/{method}"
+    out: list[Finding] = []
+    jaxpr = traced.jaxpr.jaxpr
+
+    levels = collective_census(jaxpr)
+    wire = agg.wire_bytes_per_round(abstract.params)
+    n_leaves = len(jax.tree.leaves(abstract.params))
+    expected = {}
+    if agg.client_axes:
+        expected[tuple(agg.client_axes)] = wire["intra_pod"]
+    if agg.pod_axes and agg.pod_size > 1:
+        expected[tuple(agg.pod_axes)] = wire["inter_pod"]
+
+    for axes, (count, nbytes) in sorted(levels.items()):
+        if axes not in expected:
+            out.append(Finding(
+                file=where, line=0, rule="census-unexpected-collective",
+                message=f"psum over axes {axes} — no wire level owns these "
+                        "axes (GSPMD comms never appear in the jaxpr, so "
+                        "this is an explicit stray collective)"))
+            continue
+        if count != n_leaves:
+            out.append(Finding(
+                file=where, line=0, rule="census-collective-count",
+                message=f"{count} psums over {axes}, expected {n_leaves} "
+                        "(one per parameter leaf)"))
+        if nbytes != expected[axes]:
+            out.append(Finding(
+                file=where, line=0, rule="census-collective-bytes",
+                message=f"psum payload over {axes} is {nbytes} B/rank, "
+                        f"analytic wire model says {expected[axes]} B — "
+                        "the wire and its accounting have diverged"))
+    for axes in expected:
+        if axes not in levels:
+            out.append(Finding(
+                file=where, line=0, rule="census-collective-count",
+                message=f"no psums over {axes} — an expected wire level "
+                        "is missing from the compiled step"))
+
+    if has_float64(jaxpr):
+        out.append(Finding(
+            file=where, line=0, rule="census-dtype-promotion",
+            message="float64 appears in the traced step — a silent x64 "
+                    "promotion doubles wire payloads"))
+    in_dtypes = [str(x.dtype) for x in jax.tree.leaves(abstract)]
+    out_state = traced.out_info[0]
+    out_dtypes = [str(x.dtype) for x in jax.tree.leaves(out_state)]
+    if in_dtypes != out_dtypes:
+        out.append(Finding(
+            file=where, line=0, rule="census-dtype-promotion",
+            message="output state dtypes differ from the input state — "
+                    "an in-flight promotion breaks donation silently"))
+
+    n_state = len(jax.tree.leaves(abstract))
+    aliased = lowered.as_text().count("tf.aliasing_output")
+    if aliased != n_state:
+        out.append(Finding(
+            file=where, line=0, rule="census-donation",
+            message=f"{aliased} of {n_state} donated state buffers alias an "
+                    "output — XLA silently dropped the rest (shape/dtype "
+                    "mismatch), doubling peak memory"))
+    return out
+
+
+def check_elastic(cfg, mesh, label: str, method: str = "diana"
+                  ) -> list[Finding]:
+    """The elastic step's weights must be live runtime data in the jaxpr."""
+    traced, _, _, _ = _trace_step(cfg, mesh, method, elastic=True)
+    where = f"jaxpr:{label}/{method}+elastic"
+    jaxpr = traced.jaxpr.jaxpr
+    wvar = jaxpr.invars[-1]  # weights is the trailing argument
+    used = any(wvar in eqn.invars for eqn in jaxpr.eqns)
+    if not used:
+        return [Finding(
+            file=where, line=0, rule="census-elastic-invariant",
+            message="the (m,) participation-weights input is never consumed "
+                    "— it was constant-folded, so cohort changes would "
+                    "retrace (the single-compile guarantee is broken)")]
+    return []
+
+
+def run_census() -> list[Finding]:
+    """The CLI entry point: every method on both topologies + elastic."""
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = reduced(get_config("stablelm-1.6b"), seq=16)
+    findings: list[Finding] = []
+    for label, shape, axes in CENSUS_MESHES:
+        mesh = make_test_mesh(shape, axes)
+        for method in CENSUS_METHODS:
+            findings.extend(check_step(cfg, mesh, method, label))
+    flat_mesh = make_test_mesh(*CENSUS_MESHES[0][1:])
+    findings.extend(check_elastic(cfg, flat_mesh, CENSUS_MESHES[0][0]))
+    return sorted(findings)

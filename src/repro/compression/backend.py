@@ -49,8 +49,19 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.diana_shift import LANES
 from repro.kernels.qsgd import TILE, qsgd_quantize
-from repro.kernels.randk import randk_compress, randk_decompress, randk_mask
+from repro.kernels.randk import (
+    BLOCK_ROWS,
+    randk_compress,
+    randk_decompress,
+    randk_mask,
+)
 from repro.kernels.ops import diana_shift as _pallas_diana_shift
+
+# Re-exported kernel geometry: BLOCK_ROWS is the row-block granularity every
+# wire-level Rand-k draw is quantized to. Consumers (repro.core.dist) import
+# it from here — this module owns the stable kernel surface; reaching into
+# repro.kernels directly is a lint error (rule `kernel-import`).
+__all__ = ["BLOCK_ROWS", "LANES", "TILE", "get_backend"]
 
 BACKENDS = ("reference", "pallas")
 _ENV_VAR = "REPRO_COMPRESSION_BACKEND"

@@ -46,11 +46,11 @@ class Identity:
     """No compression: Q(x) = x, omega = 0."""
 
     def compress(self, key, x):
-        del key
+        del key  # analysis: allow[ignored-argument] identity is deterministic; key is interface-wide
         return x
 
     def omega(self, size):
-        del size
+        del size  # analysis: allow[ignored-argument] omega = 0 at every dimension
         return 0.0
 
     def bits(self, size):
@@ -134,7 +134,7 @@ class TopK:
         return max(1, min(size, int(self.fraction * size)))
 
     def compress(self, key, x):
-        del key
+        del key  # analysis: allow[ignored-argument] Top-k is deterministic; key is interface-wide
         flat = _flatten(x)
         k = self._k(flat.shape[0])
         _, idx = jax.lax.top_k(jnp.abs(flat), k)
@@ -142,6 +142,7 @@ class TopK:
         return jnp.reshape(out, x.shape)
 
     def omega(self, size):
+        del size  # analysis: allow[ignored-argument] biased operator: no omega at any dimension
         # not an unbiased operator; report the delta-contraction instead
         return float("nan")
 
@@ -202,7 +203,7 @@ class NaturalCompression:
         return jnp.reshape(out, x.shape).astype(x.dtype)
 
     def omega(self, size):
-        del size
+        del size  # analysis: allow[ignored-argument] natural rounding: omega = 1/8 dimension-free
         return 1.0 / 8.0
 
     def bits(self, size):

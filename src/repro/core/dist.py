@@ -81,14 +81,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.compression.backend import get_backend
+from repro.compression.backend import BLOCK_ROWS, get_backend
 from repro.core.rules import WIRE_RULES, ShiftRule
-from repro.kernels.randk import BLOCK_ROWS
-
-# salt folded into the round key to derive the inter-pod (outer) wire key —
-# the two levels' coordinate draws must be independent (the composed variance
-# bound is a tower-rule product of two independent expectations)
-POD_KEY_SALT = 0x70D5
+from repro.core.salts import POD_KEY_SALT
 
 
 class DianaState(NamedTuple):

@@ -90,20 +90,20 @@ class ShiftRule:
         axis); an integer m prepends the stacked client axis (simulator /
         TrainState layouts). Slotted rules insert the `n_slots` axis next.
         """
-        del n_slots, dtype
-        del params, m
+        del n_slots, dtype  # analysis: allow[ignored-argument] stateless rule keeps no tables
+        del params, m  # analysis: allow[ignored-argument] stateless rule keeps no tables
         return None
 
     # -- per-round arithmetic -------------------------------------------------
 
     def select(self, shifts, idx: Index):
         """The active memory view for this round (slot tables index here)."""
-        del idx
+        del idx  # analysis: allow[ignored-argument] unslotted tables have one view
         return shifts
 
     def payload(self, g, h, *, gamma: float = 1.0):
         """What goes through the compressor."""
-        del h, gamma
+        del h, gamma  # analysis: allow[ignored-argument] shift-free payload is the raw gradient
         return g
 
     def update(self, h, q_own, mh, q_mean, *, alpha: float,
@@ -118,12 +118,12 @@ class ShiftRule:
         mean-table stepsize (defaults to alpha); cohort-sampled fleets use
         beta = (M/C)*alpha so the resident mean tracks the population mean.
         """
-        del h, q_own, beta, gamma, backend, payload
+        del h, q_own, mh, alpha, beta, gamma, backend, payload  # analysis: allow[ignored-argument] memory-free rule: direction is the aggregate itself
         return q_mean, None, None
 
     def scatter(self, shifts, idx: Index, h_new):
         """Write the round's updated memory back into the table."""
-        del idx, h_new
+        del idx, h_new  # analysis: allow[ignored-argument] no tables to write back
         return shifts
 
     # -- local (NASTYA) family server side ------------------------------------
@@ -131,13 +131,13 @@ class ShiftRule:
     def direction(self, server_h, q_mean, *, alpha: float, gamma: float = 1.0,
                   backend):
         """(direction, new_server_h) from the aggregated epoch message."""
-        del alpha, gamma, backend
+        del alpha, gamma, backend  # analysis: allow[ignored-argument] shift-free server applies the aggregate directly
         return q_mean, server_h
 
     def table_axpy(self, shifts, q, *, alpha: float):
         """Local-family client-table update h += alpha*q (the fused kernel
         would write discarded M-times-param-sized outputs here)."""
-        del q, alpha
+        del q, alpha  # analysis: allow[ignored-argument] no client tables to update
         return shifts
 
 
@@ -156,16 +156,16 @@ class SingleShift(ShiftRule):
     needs_server_h: bool = True
 
     def init_shifts(self, params, m=None, *, n_slots=1, dtype=None):
-        del n_slots
+        del n_slots  # analysis: allow[ignored-argument] unslotted: one shift per client
         return _lead_zeros(params, () if m is None else (m,), dtype)
 
     def payload(self, g, h, *, gamma: float = 1.0):
-        del gamma
+        del gamma  # analysis: allow[ignored-argument] DIANA payload g-h is stepsize-free
         return jax.tree.map(jnp.subtract, g, h)
 
     def update(self, h, q_own, mh, q_mean, *, alpha, beta=None, gamma=1.0,
                backend, payload=None):
-        del gamma, payload
+        del gamma, payload  # analysis: allow[ignored-argument] fused DIANA update needs only alpha/beta
         # the fused path: direction = H + Q_mean, h' = h + alpha*Q_own,
         # H' = H + beta*Q_mean in ONE pass (kernels/diana_shift.py)
         if isinstance(h, jax.Array):
@@ -175,7 +175,7 @@ class SingleShift(ShiftRule):
                                         beta=beta)
 
     def scatter(self, shifts, idx, h_new):
-        del shifts, idx
+        del shifts, idx  # analysis: allow[ignored-argument] unslotted table IS the round's view
         return h_new
 
     def direction(self, server_h, q_mean, *, alpha, gamma=1.0, backend):
@@ -232,7 +232,7 @@ class EfRule(ShiftRule):
     contractive: bool = True
 
     def init_shifts(self, params, m=None, *, n_slots=1, dtype=None):
-        del n_slots
+        del n_slots  # analysis: allow[ignored-argument] EF keeps one residual per client
         return _lead_zeros(params, () if m is None else (m,), dtype)
 
     def payload(self, g, h, *, gamma: float = 1.0):
@@ -240,14 +240,14 @@ class EfRule(ShiftRule):
 
     def update(self, h, q_own, mh, q_mean, *, alpha, beta=None, gamma=1.0,
                backend, payload=None):
-        del h, alpha, beta, backend
+        del h, alpha, beta, backend  # analysis: allow[ignored-argument] EF memory is payload-q, no stepsize
         direction = q_mean if gamma == 1.0 else jax.tree.map(
             lambda q: q / gamma, q_mean)
         new_e = jax.tree.map(jnp.subtract, payload, q_own)
         return direction, new_e, mh
 
     def scatter(self, shifts, idx, h_new):
-        del shifts, idx
+        del shifts, idx  # analysis: allow[ignored-argument] residual table IS the round's view
         return h_new
 
 

@@ -1,0 +1,94 @@
+"""Central RNG salt registry — the single home for stream-separation
+constants (DESIGN.md §3.12).
+
+Every convergence claim in the paper holds only if each stochastic draw is a
+pure function of a structured entropy tuple ``(seed, salt, round/epoch)``.
+The *salt* is what keeps independent channels (wire levels, fault channels,
+dataset synthesis, cohort baselines) from silently sharing a stream when a
+user reuses the same integer seed across subsystems. Scattering salt
+literals across modules is how collisions happen without anyone noticing;
+this registry makes every salt a named, uniqueness-checked constant, and the
+static analyzer (`repro.analysis`, rule ``rng-literal-salt``) rejects any
+numeric salt literal outside this file.
+
+Import the NAMES, never restate the values. `_register` raises at import
+time on a duplicate value or name, and tests/test_analysis.py pins the
+registry's global uniqueness.
+
+`root_key(seed, salt)` is the sanctioned way to construct a jax root key:
+`jax.random.key(seed)` folded with a named salt, so two subsystems seeded
+with the same integer still draw from disjoint key trees (rule
+``rng-unstructured-seed`` flags bare `jax.random.key(...)` construction
+anywhere else in the package).
+"""
+from __future__ import annotations
+
+_REGISTRY: dict[str, int] = {}
+
+
+def _register(name: str, value: int) -> int:
+    if name in _REGISTRY:
+        raise ValueError(f"salt {name!r} registered twice")
+    if value in _REGISTRY.values():
+        clash = next(k for k, v in _REGISTRY.items() if v == value)
+        raise ValueError(
+            f"salt value {value:#x} of {name!r} collides with {clash!r} — "
+            "two channels would share an entropy stream")
+    _REGISTRY[name] = int(value)
+    return int(value)
+
+
+def registered_salts() -> dict[str, int]:
+    """Name -> value snapshot (the uniqueness test and the linter read it)."""
+    return dict(_REGISTRY)
+
+
+# -- wire (repro.core.dist) --------------------------------------------------
+# folded into the round key to derive the inter-pod (outer) wire key: the two
+# levels' coordinate draws must be independent (the composed variance bound
+# is a tower-rule product of two independent expectations)
+POD_KEY_SALT = _register("POD_KEY_SALT", 0x70D5)
+
+# -- NASTYA sub-streams (repro.launch.steps) ---------------------------------
+# the round key rkey = fold_in(key, step) splits into per-purpose sub-streams:
+# the per-pod micro-epoch permutation draw, and one key per local micro-step
+# (consecutive salts NASTYA_LOCAL_SALT + t for t in range(local_steps); the
+# registry entry reserves the base — local_steps stays far below any other
+# registered value, and the permutation salt sits below the base).
+NASTYA_PERM_SALT = _register("NASTYA_PERM_SALT", 1)
+NASTYA_LOCAL_SALT = _register("NASTYA_LOCAL_SALT", 2)
+
+# -- fleet (repro.fleet.cohort / repro.fleet.chaos) --------------------------
+# 3-element entropy tuple (seed, WR_COHORT_SALT, round) for the i.i.d.
+# with-replacement baseline — disjoint from the 2-element (seed, epoch)
+# sequences the 'rr' mode draws from
+WR_COHORT_SALT = _register("WR_COHORT_SALT", 0x5EED)
+# the three independent fault channels (darkness, latency, store I/O) never
+# share a stream even under one chaos seed
+CHAOS_DROP_SALT = _register("CHAOS_DROP_SALT", 0xD42C)
+CHAOS_LATENCY_SALT = _register("CHAOS_LATENCY_SALT", 0x1A7E)
+CHAOS_IO_SALT = _register("CHAOS_IO_SALT", 0x10FA)
+
+# -- dataset synthesis (launch.train modality stubs) -------------------------
+# salted so seed-0 stub extras never alias the (seed, epoch) sampler streams.
+# NOTE: the repro.data token/logreg generators deliberately keep their
+# seed-era unsalted streams (inline-allowed at the call sites) — their draws
+# ARE the pinned datasets the suite's convergence floors were calibrated on.
+MODALITY_STUB_SALT = _register("MODALITY_STUB_SALT", 0x3D0D)
+
+# -- jax root keys (repro.launch) --------------------------------------------
+PARAMS_KEY_SALT = _register("PARAMS_KEY_SALT", 0x9A2A)
+ROUNDS_KEY_SALT = _register("ROUNDS_KEY_SALT", 0x207D)
+SERVE_KEY_SALT = _register("SERVE_KEY_SALT", 0x5E2E)
+
+
+def root_key(seed: int, salt: int):
+    """Structured jax root key: key(seed) folded with a registry salt.
+
+    The only sanctioned `jax.random.key` construction site in the package
+    (DESIGN.md §3.12). jax is imported lazily so importing this module never
+    initializes device state (the dry-run contract, DESIGN.md §6).
+    """
+    import jax
+
+    return jax.random.fold_in(jax.random.key(seed), salt)

@@ -46,10 +46,13 @@ from typing import Callable, NamedTuple
 import numpy as np
 
 # salts folded into the seeded generators so the independent fault channels
-# (darkness, latency, store I/O) never share a stream
-_SALT_DROP = 0xD42C
-_SALT_LATENCY = 0x1A7E
-_SALT_IO = 0x10FA
+# (darkness, latency, store I/O) never share a stream; registered (and
+# uniqueness-checked) in repro.core.salts
+from repro.core.salts import (
+    CHAOS_DROP_SALT as _SALT_DROP,
+    CHAOS_IO_SALT as _SALT_IO,
+    CHAOS_LATENCY_SALT as _SALT_LATENCY,
+)
 
 LATE_POLICIES = ("discount", "drop")
 

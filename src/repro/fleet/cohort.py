@@ -42,6 +42,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import salts
+
 COHORT_MODES = ("rr", "with_replacement")
 
 
@@ -141,7 +143,8 @@ class CohortSampler:
         if self.mode == "with_replacement":
             # 3-element entropy tuple (with a salt) — disjoint from the
             # 2-element (seed, epoch) sequences the 'rr' mode draws from
-            rng = np.random.default_rng((self.seed, 0x5EED, int(rnd)))
+            rng = np.random.default_rng(
+                (self.seed, salts.WR_COHORT_SALT, int(rnd)))
             ids = rng.choice(self.population, size=m, replace=False)
             return np.sort(ids.astype(np.int64))
         g = rnd * m

@@ -256,6 +256,9 @@ class ClientStateStore:
 
     def add_bits(self, cohort: np.ndarray, bits_per_client: float) -> None:
         """Charge a round's uplink bits to the participating clients."""
+        # analysis: allow[bits-accounting] host-side float64 counters
+        # (53-bit mantissa): the f32 stall the rule guards against can't
+        # happen off-device; api.accumulate_bits is for on-device arrays
         self.bits[self._check_cohort(cohort)] += float(bits_per_client)
 
     # -- checkpointing ----------------------------------------------------------

@@ -32,6 +32,7 @@ from repro.configs import (
     input_specs,
     shape_supported,
 )
+from repro.core import salts
 from repro.core.dist import CompressedAggregation
 from repro.data.pipeline import abstract_stream_batch
 from repro.launch import steps
@@ -59,7 +60,8 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
         # the batch contract of data.pipeline.make_batch_stream: client-major
         # m * local_steps * b rows on every leaf
         batch = abstract_stream_batch(specs["batch"], local_steps)
-        key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+        key = jax.ShapeDtypeStruct(
+            (), salts.root_key(0, salts.ROUNDS_KEY_SALT).dtype)
         # the buffered-async wire weights vector (elastic step only)
         extra = ((jax.ShapeDtypeStruct((num_clients(mesh),), jnp.float32),)
                  if elastic else ())
@@ -74,7 +76,8 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
             cfg, mesh, cache_len=shape.seq_len, remat=remat, unroll=unroll
         )
         params_abs = jax.eval_shape(
-            lambda: transformer.init_params(jax.random.key(0), cfg)
+            lambda: transformer.init_params(
+                salts.root_key(0, salts.PARAMS_KEY_SALT), cfg)
         )
         jitted = lower_args(params_abs, specs["batch"])
         with compat.set_mesh(mesh):
@@ -82,7 +85,8 @@ def _compile_one(cfg, shape, mesh, agg, *, remat, unroll: bool,
     else:  # decode
         serve, lower_args = steps.make_serve_step(cfg, mesh, unroll=unroll)
         params_abs = jax.eval_shape(
-            lambda: transformer.init_params(jax.random.key(0), cfg)
+            lambda: transformer.init_params(
+                salts.root_key(0, salts.PARAMS_KEY_SALT), cfg)
         )
         jitted, _ = lower_args(params_abs, specs["cache"], specs["tokens"])
         with compat.set_mesh(mesh):

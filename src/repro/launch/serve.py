@@ -20,6 +20,7 @@ from repro.launch import compat
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.core import salts
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import transformer as T
@@ -42,7 +43,7 @@ def main():
     else:
         mesh = make_test_mesh((4, 2), ("data", "model"))
         cfg = reduced(get_config(args.arch), seq=max(64, 2 * args.prompt_len))
-    key = jax.random.key(0)
+    key = salts.root_key(0, salts.SERVE_KEY_SALT)
     params = T.init_params(key, cfg)
     cache_len = args.prompt_len + args.tokens + 8
 

@@ -136,7 +136,7 @@ def batch_specs(batch, client_axes: tuple[str, ...]) -> Any:
 
 
 def cache_specs(cache, client_axes: tuple[str, ...], *, mesh,
-                batch_size: int | None = None, n_clients: int = 1) -> Any:
+                n_clients: int = 1) -> Any:
     """Decode-cache shardings. Cache leaves are (L, B, ...):
 
     - B >= n_clients (and divisible): batch over client axes; then the

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import salts
 from repro.core.dist import CompressedAggregation, DianaState
 from repro.launch import compat, sharding
 from repro.launch.mesh import (
@@ -151,8 +152,8 @@ def abstract_train_state(cfg: ArchConfig, agg: CompressedAggregation,
                          m: int, *, optimizer: str = "sgd", mesh=None,
                          local_steps: int = 1) -> TrainState:
     return jax.eval_shape(
-        lambda: init_train_state(jax.random.key(0), cfg, agg, m,
-                                 optimizer=optimizer, mesh=mesh,
+        lambda: init_train_state(salts.root_key(0, salts.PARAMS_KEY_SALT),
+                                 cfg, agg, m, optimizer=optimizer, mesh=mesh,
                                  local_steps=local_steps)
     )
 
@@ -465,7 +466,8 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
             permute_fn, in_specs=(bspecs, P(), P()),
             out_specs=(bspecs, P(pod_axis if pod_axis else None, None)))(
             batch_r, slots,
-            jax.random.key_data(jax.random.fold_in(rkey, 1)))
+            jax.random.key_data(
+                jax.random.fold_in(rkey, salts.NASTYA_PERM_SALT)))
         xs = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), batch_r)
         slot_cols = jnp.moveaxis(slots_pod, 1, 0)  # (local_steps, n_pods)
 
@@ -483,7 +485,8 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                     lambda p: jnp.repeat(p, clients_per_pod, axis=0), x),
                 jax.tree.map(lambda s: NamedSharding(mesh, s), stacked_specs))
             losses, g = grads_and_loss(x_clients, batch_j)
-            kd = jax.random.key_data(jax.random.fold_in(rkey, 2 + t))
+            kd = jax.random.key_data(
+                jax.random.fold_in(rkey, salts.NASTYA_LOCAL_SALT + t))
             direction, shifts, mean_shift = local_wire(
                 g, shifts, mean_shift, kd, slot_j)
             x = jax.tree.map(
@@ -634,12 +637,10 @@ def make_prefill_step(cfg: ArchConfig, mesh, *, cache_len: int,
             lambda x: NamedSharding(mesh, P(caxes, *(None,) * (x.ndim - 1))),
             batch_abs,
         )
-        batch_size = jax.tree.leaves(batch_abs)[0].shape[0]
         cache_abs = jax.eval_shape(prefill, params_abs, batch_abs)[1]
         csh = jax.tree.map(
             lambda s: NamedSharding(mesh, s),
             sharding.cache_specs(cache_abs, caxes, mesh=mesh,
-                                 batch_size=batch_size,
                                  n_clients=num_clients(mesh)),
         )
         jitted = jax.jit(prefill, in_shardings=(psh, bsh),
@@ -662,7 +663,7 @@ def make_serve_step(cfg: ArchConfig, mesh, *, unroll: bool = False):
         n_cl = num_clients(mesh)
         csh = jax.tree.map(
             lambda s: NamedSharding(mesh, s),
-            sharding.cache_specs(cache_abs, caxes, mesh=mesh, batch_size=b,
+            sharding.cache_specs(cache_abs, caxes, mesh=mesh,
                                  n_clients=n_cl),
         )
         tsh = NamedSharding(mesh, P(caxes) if b >= n_cl else P())

@@ -41,6 +41,7 @@ from repro.checkpoint.io import (
     save_fleet_checkpoint,
 )
 from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.core import salts
 from repro.core.dist import CompressedAggregation
 from repro.data.paging import ClientDataStore, LookaheadPager
 from repro.data.pipeline import make_batch_stream, shared_slots_for_step
@@ -69,7 +70,7 @@ def stub_modalities(cfg, m: int, n_batches: int, b: int, *, seed: int = 0):
     rows — indistinguishable from a misaligned stream in any test).
     """
     extras = {}
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng((seed, salts.MODALITY_STUB_SALT))
     if cfg.family == "vlm":
         extras["patches"] = rng.normal(
             size=(m, n_batches, b, cfg.vision_patches, cfg.d_model)
@@ -180,7 +181,7 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 "(page identities derive from it)")
         start_round = fm["round"]
 
-    key = jax.random.key(1)
+    key = salts.root_key(0, salts.ROUNDS_KEY_SALT)
     t0 = time.time()
     with compat.set_mesh(mesh):
         if args.resume:
@@ -191,9 +192,10 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                   f"(fleet epoch {fm['fleet_epoch']})")
         else:
             state = jax.device_put(
-                steps.init_train_state(jax.random.key(0), cfg, agg, m,
-                                       optimizer=args.optimizer, mesh=mesh,
-                                       local_steps=args.local_steps),
+                steps.init_train_state(
+                    salts.root_key(0, salts.PARAMS_KEY_SALT), cfg, agg, m,
+                    optimizer=args.optimizer, mesh=mesh,
+                    local_steps=args.local_steps),
                 shardings)
         if use_async:
             runner = AsyncFleetRunner(
@@ -424,10 +426,11 @@ def main():
                   f"(epoch {cursor['epoch']}, batch {cursor['step']})")
         else:
             state = jax.device_put(
-                steps.init_train_state(jax.random.key(0), cfg, agg, m,
-                                       optimizer=args.optimizer, mesh=mesh,
-                                       local_steps=args.local_steps), shardings)
-        key = jax.random.key(1)
+                steps.init_train_state(
+                    salts.root_key(0, salts.PARAMS_KEY_SALT), cfg, agg, m,
+                    optimizer=args.optimizer, mesh=mesh,
+                    local_steps=args.local_steps), shardings)
+        key = salts.root_key(0, salts.ROUNDS_KEY_SALT)
         t0 = time.time()
 
         # the NASTYA-aware stream owns RR order, client-major assembly,

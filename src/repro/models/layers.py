@@ -293,8 +293,15 @@ def lm_logits(x, table, true_vocab: int):
 
 
 def cross_entropy(logits, labels, true_vocab: int):
-    """Mean CE in f32; labels int32 (..., ) in [0, true_vocab)."""
+    """Mean CE in f32; labels int32 (..., ) in [0, true_vocab).
+
+    Masks the padded vocab tail itself (idempotent after `lm_logits`), so
+    the logsumexp never includes garbage columns of an unmasked head."""
     logits = logits.astype(jnp.float32)
+    v_pad = logits.shape[-1]
+    if v_pad > true_vocab:
+        neg = jnp.full((v_pad - true_vocab,), -1e30, logits.dtype)
+        logits = logits.at[..., true_vocab:].set(neg)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     return jnp.mean(logz - gold)

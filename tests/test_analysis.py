@@ -1,0 +1,480 @@
+"""repro.analysis: the invariant linter and the jaxpr wire census.
+
+Layer 1 is tested against in-memory fixtures — including two regression
+fixtures that reproduce, minimally, the silent bugs of PR 3 (a sampler that
+`del`s its epoch argument) and PR 4 (plain-f32 bits accumulation) — each
+caught by exactly one named rule. Layer 2 is tested by tracing the real
+train steps on the shared conftest meshes and pinning the collective
+census. Finally, the repo itself must lint clean against the EMPTY
+checked-in baseline — the CI gate, as a test.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint_paths, lint_source, rule_catalog
+from repro.analysis.findings import apply_baseline, load_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _lint(src: str, rel: str = "src/repro/somewhere/mod.py"):
+    return lint_source(textwrap.dedent(src), rel)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# -- layer 1: rng purity ------------------------------------------------------
+
+
+def test_rng_unseeded_and_bare_int_seed_flagged():
+    f = _lint("""
+        import numpy as np
+        a = np.random.default_rng()
+        b = np.random.default_rng(seed)
+    """)
+    assert _rules(f) == ["rng-unstructured-seed", "rng-unstructured-seed"]
+
+
+def test_rng_structured_tuple_passes_but_literal_salt_flagged():
+    clean = _lint("""
+        import numpy as np
+        from repro.core import salts
+        rng = np.random.default_rng((seed, salts.WR_COHORT_SALT, rnd))
+    """)
+    assert clean == []
+    f = _lint("""
+        import numpy as np
+        rng = np.random.default_rng((seed, 0x5EED, rnd))
+    """)
+    assert _rules(f) == ["rng-literal-salt"]
+
+
+def test_rng_bare_jax_key_and_global_numpy_flagged():
+    f = _lint("""
+        import jax
+        import numpy as np
+        k = jax.random.key(0)
+        np.random.seed(3)
+        x = np.random.rand(4)
+    """)
+    assert _rules(f) == ["rng-unstructured-seed"] * 3
+
+
+def test_rng_fold_in_literal_and_salt_assignment_flagged():
+    f = _lint("""
+        import jax
+        k2 = jax.random.fold_in(key, 7)
+        MY_SALT = 0x1234
+    """)
+    assert sorted(_rules(f)) == ["rng-literal-salt", "rng-literal-salt"]
+
+
+def test_rng_salts_module_itself_is_exempt():
+    assert _lint("""
+        POD_KEY_SALT = 0x70D5
+    """, rel="src/repro/core/salts.py") == []
+
+
+# -- layer 1: ignored arguments (the PR 3 regression) -------------------------
+
+PR3_SAMPLER = """
+    import numpy as np
+
+    from repro.core import salts
+
+    class Sampler:
+        def __init__(self, seed, n):
+            self.rng = np.random.default_rng((seed, salts.WR_COHORT_SALT))
+            self.n = n
+
+        def sample(self, epoch):
+            del epoch  # looked harmless in review
+            return self.rng.permutation(self.n)
+"""
+
+
+def test_pr3_del_epoch_sampler_caught_by_exactly_one_rule():
+    """The PR 3 bug class: the signature promises epoch-indexed draws, the
+    body advances a mutable rng instead — near-with-replacement sampling
+    behind a without-replacement API."""
+    f = _lint(PR3_SAMPLER)
+    assert len(f) == 1 and f[0].rule == "ignored-argument"
+    assert "epoch" in f[0].message
+
+
+def test_ignored_argument_never_read_without_del():
+    f = _lint("""
+        def scale(x, gamma):
+            return x * 2.0
+    """)
+    assert _rules(f) == ["ignored-argument"]
+    assert "gamma" in f[0].message
+
+
+def test_ignored_argument_exemptions():
+    clean = _lint("""
+        import abc
+
+        def _private(unused):
+            return 1
+
+        def stub(x, y):
+            ...
+
+        class Proto:
+            @abc.abstractmethod
+            def step(self, epoch):
+                raise NotImplementedError
+
+        def outer(items):
+            def inner(unused_inner):  # nested defs are not API surface
+                return 0
+            return [inner(i) for i in items]
+    """)
+    assert clean == []
+
+
+# -- layer 1: bits accounting (the PR 4 regression) ---------------------------
+
+PR4_ACCUMULATOR = """
+    import jax.numpy as jnp
+
+    def charge_round(state, per_round):
+        new_bits = state.bits + jnp.float32(per_round)
+        return state._replace(bits=new_bits)
+"""
+
+
+def test_pr4_plain_f32_bits_accumulation_caught_by_exactly_one_rule():
+    """The PR 4 bug class: a plain f32 running total stalls once it crosses
+    ~2^24 and the reported communication cost silently flatlines."""
+    f = _lint(PR4_ACCUMULATOR)
+    assert len(f) == 1 and f[0].rule == "bits-accounting"
+
+
+def test_bits_augassign_flagged_and_api_module_exempt():
+    f = _lint("""
+        def g(bits, inc):
+            bits += inc
+            return bits
+    """)
+    assert "bits-accounting" in _rules(f)
+    assert _lint("""
+        def accumulate_bits(bits, bits_lo, inc):
+            s = bits + inc
+            return s, bits_lo - (s - bits)
+    """, rel="src/repro/core/api.py") == []
+
+
+def test_bits_lookalike_names_not_flagged():
+    assert _lint("""
+        def h(bits_per_round, x):
+            return bits_per_round + x
+    """) == []
+
+
+# -- layer 1: kernel imports --------------------------------------------------
+
+
+def test_kernel_import_flagged_outside_backend():
+    f = _lint("""
+        from repro.kernels.randk import BLOCK_ROWS
+    """, rel="src/repro/core/dist.py")
+    assert _rules(f) == ["kernel-import"]
+
+
+def test_kernel_import_allowed_in_backend_and_kernels():
+    src = "from repro.kernels.randk import BLOCK_ROWS\n"
+    assert lint_source(src, "src/repro/compression/backend.py") == []
+    assert lint_source(src, "src/repro/kernels/ops.py") == []
+
+
+# -- layer 1: trace hazards ---------------------------------------------------
+
+
+def test_trace_hazard_in_jitted_function():
+    f = _lint("""
+        import time
+        import jax
+
+        def step(x):
+            t0 = time.time()
+            return x * t0
+
+        run = jax.jit(step)
+    """)
+    assert _rules(f) == ["trace-hazard"]
+
+
+def test_trace_hazard_reaches_through_local_calls():
+    f = _lint("""
+        import time
+        import jax
+
+        def helper(x):
+            return x + time.time()
+
+        def step(x):
+            return helper(x)
+
+        run = jax.jit(step)
+    """)
+    assert _rules(f) == ["trace-hazard"]
+
+
+def test_trace_hazard_untraced_function_is_fine():
+    assert _lint("""
+        import time
+
+        def wall_clock():
+            return time.time()
+    """) == []
+
+
+def test_trace_hazard_float_cast_heuristic():
+    f = _lint("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return float(jnp.sum(x))
+    """)
+    assert _rules(f) == ["trace-hazard"]
+    # int() on host arithmetic (no jnp/jax/lax in the subtree) is fine
+    assert _lint("""
+        import jax
+
+        @jax.jit
+        def step(x, fraction, size):
+            k = int(fraction * size)
+            return x[:k]
+    """) == []
+
+
+# -- suppression semantics ----------------------------------------------------
+
+
+def test_allow_with_rationale_suppresses():
+    assert _lint("""
+        import jax
+        k = jax.random.key(0)  # analysis: allow[rng-unstructured-seed] test fixture key
+    """) == []
+
+
+def test_allow_without_rationale_is_a_finding():
+    f = _lint("""
+        import jax
+        k = jax.random.key(0)  # analysis: allow[rng-unstructured-seed]
+    """)
+    assert sorted(_rules(f)) == ["allow-missing-rationale",
+                                 "rng-unstructured-seed"]
+
+
+def test_stale_allow_is_a_finding():
+    f = _lint("""
+        x = 1  # analysis: allow[bits-accounting] nothing here violates it
+    """)
+    assert _rules(f) == ["stale-allow"]
+
+
+def test_comment_only_line_allow_covers_next_code_line():
+    assert _lint("""
+        import jax
+        # analysis: allow[rng-unstructured-seed] fixture key; continuation
+        # comments between the annotation and the code are fine
+        k = jax.random.key(0)
+    """) == []
+
+
+def test_docstring_mention_is_not_an_annotation():
+    f = _lint('''
+        import jax
+
+        def doc():
+            """Write `# analysis: allow[rng-unstructured-seed] why` inline."""
+            return jax.random.key(0)
+    ''')
+    assert _rules(f) == ["rng-unstructured-seed"]
+
+
+def test_baseline_schema_and_staleness(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"suppressions": [
+        {"rule": "kernel-import", "file": "src/x.py", "reason": "legacy"}]}))
+    entries = load_baseline(p)
+    out = apply_baseline([], entries, baseline_file=str(p))
+    assert _rules(out) == ["stale-baseline"]
+
+    p.write_text(json.dumps({"suppressions": [
+        {"rule": "kernel-import", "file": "src/x.py"}]}))
+    with pytest.raises(ValueError, match="reason"):
+        load_baseline(p)
+    p.write_text(json.dumps({"wrong": []}))
+    with pytest.raises(ValueError, match="suppressions"):
+        load_baseline(p)
+
+
+def test_rule_catalog_covers_all_emitted_rules():
+    cat = rule_catalog()
+    for rule in ("rng-unstructured-seed", "rng-literal-salt",
+                 "ignored-argument", "bits-accounting", "kernel-import",
+                 "trace-hazard", "allow-missing-rationale", "stale-allow",
+                 "stale-baseline", "syntax-error"):
+        assert rule in cat, rule
+    from repro.analysis import graph
+    for rule in graph.RULES:
+        assert rule not in cat  # census rules are layer-2, documented there
+
+
+# -- the salt registry --------------------------------------------------------
+
+
+def test_salt_registry_unique_and_complete():
+    from repro.core import salts
+
+    reg = salts.registered_salts()
+    values = list(reg.values())
+    assert len(values) == len(set(values)), "salt value collision"
+    # the literals that used to be scattered across modules kept their
+    # values (checkpoint/stream compatibility)
+    assert reg["POD_KEY_SALT"] == 0x70D5
+    assert reg["WR_COHORT_SALT"] == 0x5EED
+    assert reg["CHAOS_DROP_SALT"] == 0xD42C
+    assert reg["CHAOS_LATENCY_SALT"] == 0x1A7E
+    assert reg["CHAOS_IO_SALT"] == 0x10FA
+    assert reg["NASTYA_PERM_SALT"] == 1
+    assert reg["NASTYA_LOCAL_SALT"] == 2
+
+
+def test_salt_registry_rejects_collisions():
+    from repro.core import salts
+
+    with pytest.raises(ValueError, match="collides"):
+        salts._register("TEST_COLLIDING_SALT", 0x70D5)
+    with pytest.raises(ValueError, match="twice"):
+        salts._register("POD_KEY_SALT", 0xFFFF1)
+    assert "TEST_COLLIDING_SALT" not in salts.registered_salts()
+
+
+def test_root_key_matches_manual_construction():
+    import jax
+
+    from repro.core import salts
+
+    k = salts.root_key(7, salts.PARAMS_KEY_SALT)
+    expect = jax.random.fold_in(jax.random.key(7), salts.PARAMS_KEY_SALT)
+    assert jax.numpy.array_equal(jax.random.key_data(k),
+                                 jax.random.key_data(expect))
+
+
+# -- the repo itself lints clean (the CI gate, as a test) ---------------------
+
+
+def test_repo_lints_clean_against_checked_in_baseline():
+    findings = lint_paths([REPO / "src" / "repro"], repo_root=REPO)
+    entries = load_baseline(REPO / "analysis_baseline.json")
+    left = apply_baseline(findings, entries)
+    assert left == [], "\n".join(str(f) for f in left)
+
+
+def test_checked_in_baseline_is_empty():
+    """The baseline is an escape hatch, not a dumping ground: the repo ships
+    with zero suppressions, so any new finding fails CI loudly."""
+    assert load_baseline(REPO / "analysis_baseline.json") == []
+
+
+# -- layer 2: jaxpr census on the shared test meshes --------------------------
+
+
+@pytest.fixture(scope="module")
+def census_cfg():
+    from repro.configs import get_config, reduced
+
+    return reduced(get_config("stablelm-1.6b"), seq=16)
+
+
+@pytest.mark.parametrize("method", ["q", "diana", "diana_rr", "ef"])
+def test_census_psum_counts_flat_mesh(census_cfg, mesh_4x2, method):
+    """Flat wire on the TP=2 mesh: exactly L psums, all over "data" — one
+    per parameter leaf, nothing over "model" (GSPMD comms are invisible at
+    jaxpr level; an explicit model-axis psum would be a stray collective)."""
+    import jax
+
+    from repro.analysis import graph
+
+    traced, _, abstract, _ = graph._trace_step(census_cfg, mesh_4x2, method)
+    levels = graph.collective_census(traced.jaxpr.jaxpr)
+    L = len(jax.tree.leaves(abstract.params))
+    assert set(levels) == {("data",)}
+    assert levels[("data",)][0] == L
+
+
+@pytest.mark.parametrize("method", ["q", "diana", "diana_rr", "ef"])
+def test_census_psum_counts_two_pod_mesh(census_cfg, mesh_2x2x2, method):
+    """Hierarchical wire: L psums over "data" (intra-pod) plus L over "pod"
+    (inter-pod), and nothing else."""
+    import jax
+
+    from repro.analysis import graph
+
+    traced, _, abstract, _ = graph._trace_step(census_cfg, mesh_2x2x2, method)
+    levels = graph.collective_census(traced.jaxpr.jaxpr)
+    L = len(jax.tree.leaves(abstract.params))
+    assert set(levels) == {("data",), ("pod",)}
+    assert levels[("data",)][0] == L
+    assert levels[("pod",)][0] == L
+
+
+@pytest.mark.parametrize("label,shape,axes", [
+    ("flat", (4, 1), ("data", "model")),
+    ("two_pod", (2, 2, 1), ("pod", "data", "model")),
+])
+def test_census_full_checks_clean_on_tp1(census_cfg, label, shape, axes):
+    """The CLI's own census points (TP=1: exact byte equality against
+    wire_bytes_per_round, donation audit, dtype audit) report nothing."""
+    from repro.analysis import graph
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(shape, axes)
+    findings = []
+    for method in graph.CENSUS_METHODS:
+        findings.extend(graph.check_step(census_cfg, mesh, method, label))
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_census_elastic_weights_are_live(census_cfg):
+    from repro.analysis import graph
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((4, 1), ("data", "model"))
+    assert graph.check_elastic(census_cfg, mesh, "flat") == []
+
+
+def test_census_detects_a_broken_wire_model(census_cfg):
+    """Sanity that the census would actually fire: feed check_step a wire
+    whose analytic accounting we deliberately corrupt."""
+    import dataclasses
+
+    from repro.analysis import graph
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((4, 1), ("data", "model"))
+    real = graph._trace_step
+
+    def corrupted(cfg, mesh_, method, **kw):
+        traced, lowered, abstract, agg = real(cfg, mesh_, method, **kw)
+        return traced, lowered, abstract, dataclasses.replace(
+            agg, fraction=agg.fraction / 2)  # analytic model now disagrees
+
+    graph._trace_step, saved = corrupted, graph._trace_step
+    try:
+        findings = graph.check_step(census_cfg, mesh, "diana", "flat")
+    finally:
+        graph._trace_step = saved
+    assert any(f.rule == "census-collective-bytes" for f in findings)

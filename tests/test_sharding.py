@@ -58,8 +58,7 @@ class _FakeMesh:
 def test_cache_specs_batch_sharded():
     mesh = _FakeMesh({"data": 16, "model": 16})
     cache = {"k": jax.ShapeDtypeStruct((40, 128, 32768, 8, 128), jnp.bfloat16)}
-    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, batch_size=128,
-                                 n_clients=16)
+    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, n_clients=16)
     # batch over data; widest divisible axis (32768) over model
     assert specs["k"] == P(None, ("data",), "model", None, None)
 
@@ -69,8 +68,7 @@ def test_cache_specs_indivisible_widest_falls_through():
     # whisper cross cache: 1500 not divisible -> next-widest divisible axis
     # (head_dim 64) takes the model sharding
     cache = {"k": jax.ShapeDtypeStruct((24, 128, 1500, 16, 64), jnp.bfloat16)}
-    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, batch_size=128,
-                                 n_clients=16)
+    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, n_clients=16)
     assert specs["k"] == P(None, ("data",), None, None, "model")
 
 
@@ -78,8 +76,7 @@ def test_cache_specs_small_batch_joint_shard():
     mesh = _FakeMesh({"data": 16, "model": 16})
     # long_500k, B=1: widest axis sharded over (data, model) jointly
     cache = {"k": jax.ShapeDtypeStruct((40, 1, 4096, 4, 128), jnp.bfloat16)}
-    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, batch_size=1,
-                                 n_clients=16)
+    specs = sharding.cache_specs(cache, ("data",), mesh=mesh, n_clients=16)
     assert specs["k"] == P(None, None, ("data", "model"), None, None)
 
 
