@@ -201,6 +201,11 @@ def run_scale(name: str, tree, *, fraction: float, levels: int, reps: int):
     out["diana_shift"] = shift
     out["randk_speedup_pallas_vs_reference"] = (
         randk["reference"] / randk["pallas"])
+    # honesty: record which path actually won each row — on CPU interpret
+    # mode pallas legitimately loses to reference, and the JSON should say so
+    out["winner"] = {row: min(times, key=times.get)
+                     for row, times in (("randk", randk), ("qsgd", qsgd),
+                                        ("diana_shift", shift))}
     return out
 
 
@@ -261,6 +266,7 @@ def run_rules(*, m: int, n_slots: int, d: int, reps: int):
     out["per_slot"] = times
     out["per_slot_speedup_reference_vs_unfused"] = (
         times["unfused"] / times["reference"])
+    out["winner"] = min(times, key=times.get)
     return out
 
 
@@ -315,8 +321,72 @@ def run_pod_wire(*, d: int, fraction: float, reps: int):
     ratio = out["2-pod"]["step_s"] / out["1-pod"]["step_s"]
     out["two_pod_overhead_x"] = ratio
     comp = out["2-pod"]["inter_pod"] / max(out["2-pod"]["dense"], 1)
+    out["winner"] = min(("1-pod", "2-pod"), key=lambda k: out[k]["step_s"])
     print(f"pod    2-pod/1-pod step time {ratio:5.2f}x; inter-pod wire moves "
           f"{100 * comp:.1f}% of dense bytes")
+    return out
+
+
+def run_wire_packed(*, d: int, fraction: float, reps: int):
+    """Bit-packed wire transports vs the f32 slab: step time + true bytes.
+
+    Runs the production aggregate() (diana, shared wire) on the flat-
+    equivalent (1,4,2) mesh at every `wire_dtype`, on a MATRIX leaf (the
+    shape packing is built for — 1-D cols=1 leaves pay the full per-row
+    sideband and are a net loss, DESIGN.md §3.13). Bytes come from the
+    static accounting (`wire_bytes_per_round`), which the jaxpr census pins
+    against the lowered step's collective payloads — so the byte column is
+    deterministic, not a measurement. Step time is reported honestly: on
+    CPU interpret mode the pack/unpack kernels ADD work and f32 usually
+    wins the clock; the byte ratios are the point.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compression.backend import WIRE_DTYPES
+    from repro.core.dist import CompressedAggregation
+    from repro.launch import compat
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import configure_agg
+
+    cols = 256
+    rows = d // cols
+    print(f"\n--- wire packed: {rows} x {cols} matrix/client, k/d={fraction} "
+          + "-" * 10)
+    out = {"d": d, "rows": rows, "cols": cols, "fraction": fraction}
+    mesh = make_test_mesh((1, 4, 2), ("pod", "data", "model"))
+    grads = {"w": jax.random.normal(jax.random.key(7), (4, rows, cols),
+                                    jnp.float32)}
+    specs = {"w": P(("pod", "data"), None, "model")}
+    local = {"w": jnp.zeros((rows, cols // 2), jnp.float32)}  # device block
+    for wd in WIRE_DTYPES:
+        agg = configure_agg(
+            CompressedAggregation(method="diana", wire="shared",
+                                  fraction=fraction, shift_dtype=jnp.float32,
+                                  wire_dtype=wd), mesh)
+
+        def round_fn(g, agg=agg):
+            g = jax.tree.map(lambda x: x[0], g)
+            state = agg.init(g)
+            direction, _ = agg.aggregate(g, state, jax.random.PRNGKey(0))
+            return jax.tree.map(lambda x: x[None], direction)
+
+        mapped = compat.shard_map(round_fn, mesh=mesh, in_specs=(specs,),
+                                  out_specs=specs,
+                                  axis_names=set(mesh.axis_names),
+                                  check_vma=False)
+        sec = bench(mapped, grads, reps=reps)
+        wire = agg.wire_bytes_per_round(local)
+        out[wd] = {"step_s": sec, "intra_pod": wire["intra_pod"]}
+    f32_bytes = out["f32"]["intra_pod"]
+    for wd in WIRE_DTYPES:
+        r = out[wd]["intra_pod"] / max(f32_bytes, 1)
+        out[wd]["bytes_ratio_vs_f32"] = r
+        print(f"wire   {wd:10s} {fmt(out[wd]['step_s'])}   "
+              f"intra {out[wd]['intra_pod']:>8,}B  ({r:5.3f}x f32 bytes)")
+    out["winner"] = min(WIRE_DTYPES, key=lambda w: out[w]["step_s"])
+    out["bytes_winner"] = min(WIRE_DTYPES, key=lambda w: out[w]["intra_pod"])
+    print(f"wire   fastest clock: {out['winner']}; fewest bytes: "
+          f"{out['bytes_winner']}")
     return out
 
 
@@ -396,6 +466,7 @@ def run_pipeline_bench(*, quick: bool, reps: int):
           f"({seed_s / stream_s:5.1f}x vs seed)")
     out["assemble"] = {"seed": seed_s, "stream": stream_s}
     out["assemble_speedup_stream_vs_seed"] = seed_s / stream_s
+    out["winner"] = min(out["assemble"], key=out["assemble"].get)
 
     # prefetch overlap: the "train step" sleeps ~2x the assembly cost —
     # like a jitted step blocking in block_until_ready, it releases the GIL
@@ -722,20 +793,39 @@ def run_fleet_paging_bench(*, quick: bool, reps: int):
 
 
 def check_baseline(results: dict, baseline_path: str) -> bool:
-    """CI guard: fail when the pallas-vs-reference (and pallas-vs-seed)
-    Rand-k speedups regress below the committed BENCH_compression.json.
+    """CI guard: fail when the Rand-k speedups regress below the committed
+    BENCH_compression.json, or the packed wire's byte ratios grow.
 
     Shapes differ between --quick (CI) and full runs and shared runners are
-    noisy, so the gate is a generous fraction of the committed ratio —
-    tight enough to catch a kernel path silently falling back or slowing by
-    integer factors, loose enough not to flake on timer jitter.
+    noisy, so the timing gates are a generous fraction of the committed
+    ratio — tight enough to catch a kernel path silently falling back or
+    slowing by integer factors, loose enough not to flake on timer jitter.
+
+    Which timing gates apply depends on what the current run actually
+    compiled: pallas-vs-* floors only bind under real Mosaic kernels
+    (meta.pallas_mode == "mosaic"); CPU interpret mode executes kernel
+    bodies eqn-by-eqn, so its "pallas" timings measure the interpreter, and
+    reference-vs-seed is the regression signal there. The wire_packed byte
+    ratios are static accounting (census-pinned), not timings, so they gate
+    at near-equality.
     """
     with open(baseline_path) as f:
-        base = json.load(f)["scales"]["logreg"]
+        full_base = json.load(f)
+    base = full_base["scales"]["logreg"]
     cur = results["scales"]["logreg"]
+    # reference-vs-seed runs systematically lower at --quick shapes than the
+    # committed full-run number (~0.4x: the seed path's per-leaf sort is what
+    # grows superlinearly), so its floor fraction is looser — it still trips
+    # on the integer-factor regressions the gate exists for
+    gates = [("randk_speedup_reference_vs_seed", 0.15)]
+    if results["meta"]["pallas_mode"] == "mosaic":
+        gates += [("randk_speedup_pallas_vs_reference", 0.35),
+                  ("randk_speedup_pallas_vs_seed", 0.35)]
+    else:
+        print("pallas_mode=interpret: pallas-vs-* floors not binding "
+              "(interpret timings measure the interpreter, not the kernels)")
     ok = True
-    for key, floor_frac in (("randk_speedup_pallas_vs_reference", 0.35),
-                            ("randk_speedup_pallas_vs_seed", 0.35)):
+    for key, floor_frac in gates:
         if key not in base:
             print(f"baseline has no {key}; skipping that gate")
             continue
@@ -744,6 +834,18 @@ def check_baseline(results: dict, baseline_path: str) -> bool:
         print(f"baseline gate {key}: current {cur[key]:.2f}x vs committed "
               f"{base[key]:.2f}x (floor {floor:.2f}x) -> {status}")
         ok = ok and cur[key] >= floor
+    base_wp = full_base.get("wire_packed", {}).get("small")
+    cur_wp = results.get("wire_packed", {}).get("small")
+    if base_wp and cur_wp:
+        for wd in ("bf16", "packed8", "packed4"):
+            b = base_wp[wd]["bytes_ratio_vs_f32"]
+            c = cur_wp[wd]["bytes_ratio_vs_f32"]
+            status = "ok" if c <= b * 1.01 else "REGRESSED"
+            print(f"baseline gate wire_packed/{wd} bytes-vs-f32: current "
+                  f"{c:.4f} vs committed {b:.4f} -> {status}")
+            ok = ok and c <= b * 1.01
+    else:
+        print("baseline has no wire_packed section; skipping byte-ratio gate")
     return ok
 
 
@@ -794,6 +896,13 @@ def main() -> None:
         d=8_192 if args.quick else 65_536, fraction=0.05,
         reps=max(3, reps // 2),
     )
+
+    results["wire_packed"] = {
+        "small": run_wire_packed(d=4_096 if args.quick else 8_192,
+                                 fraction=0.05, reps=max(3, reps // 2)),
+        "large": run_wire_packed(d=16_384 if args.quick else 65_536,
+                                 fraction=0.05, reps=max(3, reps // 2)),
+    }
 
     results["pipeline"] = run_pipeline_bench(quick=args.quick,
                                              reps=max(3, reps // 2))

@@ -9,13 +9,19 @@ the compiled artifact against the repo's analytic claims:
 collective census
     Inside the fully-manual shard_map wire regions only EXPLICIT collectives
     exist (GSPMD inserts its comms later, invisibly to the jaxpr), so the
-    psum equations ARE the wire. Per level (axis names distinguish the
+    collective equations ARE the wire. Per level (axis names distinguish the
     intra-pod exchange over "data" from the inter-pod one over "pod") the
-    census must show exactly L psums — one per parameter leaf — and their
-    payload bytes must equal `CompressedAggregation.wire_bytes_per_round`
-    exactly. The CLI runs TP=1 meshes ((4,1) and (2,2,1)): per-device jaxpr
-    payloads divide the lane (cols) dimension by the model-axis size, while
-    the analytic model counts a client's full contribution, so byte EQUALITY
+    f32/bf16 wire must show exactly L psums — one per parameter leaf — and
+    their payload bytes must equal
+    `CompressedAggregation.wire_bytes_per_round` exactly. The packed wires
+    (wire_dtype 'packed8'/'packed4', DESIGN.md §3.13) have NO psums on the
+    wire axes: the census must instead show exactly 2L all_gathers per level
+    (the byte slab + the f32 scale sideband, per leaf) whose per-rank
+    operand bytes sum to the same analytic number — all_gather payload is
+    what each rank CONTRIBUTES (the operand), matching the accounting. The
+    CLI runs TP=1 meshes ((4,1) and (2,2,1)): per-device jaxpr payloads
+    divide the lane (cols) dimension by the model-axis size, while the
+    analytic model counts a client's full contribution, so byte EQUALITY
     holds only at TP=1 (the f32-lane caveat: on TP>1 meshes compare counts,
     or scale by the model-axis factor — tests/test_analysis.py does the
     former).
@@ -49,11 +55,13 @@ from repro.analysis.findings import Finding
 
 RULES = {
     "census-collective-count":
-        "psum count per wire level != one per parameter leaf",
+        "collective count per wire level != the wire model (one psum per "
+        "leaf; two all_gathers per leaf on packed wires)",
     "census-collective-bytes":
-        "psum payload bytes != the analytic wire_bytes_per_round",
+        "collective payload bytes != the analytic wire_bytes_per_round",
     "census-unexpected-collective":
-        "a collective over axes no wire level owns (e.g. 'model')",
+        "a collective over axes no wire level owns (e.g. 'model'), or of a "
+        "kind the wire_dtype must not emit (psum on a packed wire)",
     "census-dtype-promotion":
         "float64 in the traced step, or state dtype changed in flight",
     "census-donation":
@@ -69,6 +77,10 @@ CENSUS_MESHES = (
     ("flat", (4, 1), ("data", "model")),
     ("two_pod", (2, 2, 1), ("pod", "data", "model")),
 )
+# Non-f32 transports audited on top: packed8 on both topologies (the
+# all-gather wire replaces every psum), packed4 + bf16 spot-checked flat.
+CENSUS_PACKED_METHODS = ("q", "diana_rr")
+CENSUS_EXTRA_DTYPES = ("packed4", "bf16")
 
 
 def _iter_jaxprs(jaxpr):
@@ -82,14 +94,20 @@ def _iter_jaxprs(jaxpr):
                     yield from _iter_jaxprs(inner)
 
 
-def collective_census(jaxpr) -> dict[tuple[str, ...], tuple[int, int]]:
-    """{psum axes -> (eqn count, payload bytes)} over all nested jaxprs."""
+def collective_census(jaxpr, primitive: str = "psum"
+                      ) -> dict[tuple[str, ...], tuple[int, int]]:
+    """{axes -> (eqn count, payload bytes)} for one collective primitive
+    over all nested jaxprs. Payload is the per-rank OPERAND bytes — for
+    psum the reduced buffer, for all_gather what this rank contributes
+    (the gathered result is axis_size times larger but only the operand
+    crosses the wire once per rank)."""
     out: dict[tuple[str, ...], tuple[int, int]] = {}
     for jx in _iter_jaxprs(jaxpr):
         for eqn in jx.eqns:
-            if eqn.primitive.name != "psum":
+            if eqn.primitive.name != primitive:
                 continue
-            axes = tuple(eqn.params.get("axes", ()))
+            axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+            axes = (axes,) if isinstance(axes, str) else tuple(axes)
             nbytes = sum(
                 int(np.prod(v.aval.shape)) * v.aval.dtype.itemsize
                 for v in eqn.invars)
@@ -110,7 +128,7 @@ def has_float64(jaxpr) -> bool:
 
 
 def _trace_step(cfg, mesh, method: str, *, elastic: bool = False,
-                fraction: float = 0.25):
+                fraction: float = 0.25, wire_dtype: str = "f32"):
     """Build + trace one train step; returns everything the checks need."""
     import jax
     import jax.numpy as jnp
@@ -121,7 +139,8 @@ def _trace_step(cfg, mesh, method: str, *, elastic: bool = False,
 
     agg0 = CompressedAggregation(method=method, wire="shared",
                                  fraction=fraction,
-                                 shift_dtype=jnp.float32)
+                                 shift_dtype=jnp.float32,
+                                 wire_dtype=wire_dtype)
     jitted, abstract, _, _ = steps.make_train_step(
         cfg, mesh, agg=agg0, remat=False, seq_shard=False, elastic=elastic)
     agg = steps.configure_agg(agg0, mesh, 1)
@@ -142,18 +161,27 @@ def _trace_step(cfg, mesh, method: str, *, elastic: bool = False,
     return traced, lowered, abstract, agg
 
 
-def check_step(cfg, mesh, method: str, label: str) -> list[Finding]:
-    """All census checks for one (mesh, method) point."""
+def check_step(cfg, mesh, method: str, label: str, *,
+               wire_dtype: str = "f32") -> list[Finding]:
+    """All census checks for one (mesh, method, wire_dtype) point."""
     import jax
 
-    traced, lowered, abstract, agg = _trace_step(cfg, mesh, method)
+    traced, lowered, abstract, agg = _trace_step(cfg, mesh, method,
+                                                 wire_dtype=wire_dtype)
     where = f"jaxpr:{label}/{method}"
+    if wire_dtype != "f32":
+        where += f"/{wire_dtype}"
     out: list[Finding] = []
     jaxpr = traced.jaxpr.jaxpr
 
-    levels = collective_census(jaxpr)
+    packed = wire_dtype in ("packed8", "packed4")
+    wire_prim = "all_gather" if packed else "psum"
+    levels = collective_census(jaxpr, wire_prim)
     wire = agg.wire_bytes_per_round(abstract.params)
     n_leaves = len(jax.tree.leaves(abstract.params))
+    # packed wires move two gathers per leaf: the byte slab + the f32
+    # per-row scale sideband; psum wires one reduction per leaf
+    per_leaf = 2 if packed else 1
     expected = {}
     if agg.client_axes:
         expected[tuple(agg.client_axes)] = wire["intra_pod"]
@@ -164,27 +192,37 @@ def check_step(cfg, mesh, method: str, label: str) -> list[Finding]:
         if axes not in expected:
             out.append(Finding(
                 file=where, line=0, rule="census-unexpected-collective",
-                message=f"psum over axes {axes} — no wire level owns these "
-                        "axes (GSPMD comms never appear in the jaxpr, so "
-                        "this is an explicit stray collective)"))
+                message=f"{wire_prim} over axes {axes} — no wire level owns "
+                        "these axes (GSPMD comms never appear in the jaxpr, "
+                        "so this is an explicit stray collective)"))
             continue
-        if count != n_leaves:
+        if count != per_leaf * n_leaves:
             out.append(Finding(
                 file=where, line=0, rule="census-collective-count",
-                message=f"{count} psums over {axes}, expected {n_leaves} "
-                        "(one per parameter leaf)"))
+                message=f"{count} {wire_prim}s over {axes}, expected "
+                        f"{per_leaf * n_leaves} ({per_leaf} per parameter "
+                        "leaf)"))
         if nbytes != expected[axes]:
             out.append(Finding(
                 file=where, line=0, rule="census-collective-bytes",
-                message=f"psum payload over {axes} is {nbytes} B/rank, "
-                        f"analytic wire model says {expected[axes]} B — "
-                        "the wire and its accounting have diverged"))
+                message=f"{wire_prim} payload over {axes} is {nbytes} "
+                        f"B/rank, analytic wire model says {expected[axes]} "
+                        "B — the wire and its accounting have diverged"))
     for axes in expected:
         if axes not in levels:
             out.append(Finding(
                 file=where, line=0, rule="census-collective-count",
-                message=f"no psums over {axes} — an expected wire level "
-                        "is missing from the compiled step"))
+                message=f"no {wire_prim}s over {axes} — an expected wire "
+                        "level is missing from the compiled step"))
+    # the OTHER wire primitive must not appear at all: a psum on a packed
+    # wire would sum per-rank byte lattices with different scales (wrong);
+    # an all_gather on a psum wire is an unaccounted dense collective
+    other = "psum" if packed else "all_gather"
+    for axes, (count, _) in sorted(collective_census(jaxpr, other).items()):
+        out.append(Finding(
+            file=where, line=0, rule="census-unexpected-collective",
+            message=f"{count} {other}(s) over {axes} — the {wire_dtype} "
+                    f"wire must move only {wire_prim}s"))
 
     if has_float64(jaxpr):
         out.append(Finding(
@@ -239,6 +277,13 @@ def run_census() -> list[Finding]:
         mesh = make_test_mesh(shape, axes)
         for method in CENSUS_METHODS:
             findings.extend(check_step(cfg, mesh, method, label))
+        for method in CENSUS_PACKED_METHODS:
+            findings.extend(check_step(cfg, mesh, method, label,
+                                       wire_dtype="packed8"))
     flat_mesh = make_test_mesh(*CENSUS_MESHES[0][1:])
+    for wire_dtype in CENSUS_EXTRA_DTYPES:
+        findings.extend(check_step(cfg, flat_mesh, "diana",
+                                   CENSUS_MESHES[0][0],
+                                   wire_dtype=wire_dtype))
     findings.extend(check_elastic(cfg, flat_mesh, CENSUS_MESHES[0][0]))
     return sorted(findings)

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.diana_shift import LANES
+from repro.kernels.pack import pack_slab, unpack_reduce, unpack_slab
 from repro.kernels.qsgd import TILE, qsgd_quantize
 from repro.kernels.randk import (
     BLOCK_ROWS,
@@ -61,7 +62,14 @@ from repro.kernels.ops import diana_shift as _pallas_diana_shift
 # wire-level Rand-k draw is quantized to. Consumers (repro.core.dist) import
 # it from here — this module owns the stable kernel surface; reaching into
 # repro.kernels directly is a lint error (rule `kernel-import`).
-__all__ = ["BLOCK_ROWS", "LANES", "TILE", "get_backend"]
+__all__ = ["BLOCK_ROWS", "LANES", "TILE", "WIRE_DTYPES", "get_backend"]
+
+# Wire transport formats for the shared wire's slab (core.dist validates the
+# method/wire combinations; this module owns the mechanics). 'f32' is the
+# status-quo psum; 'bf16' downcasts the value slab before the psum; the
+# packed modes move a byte lattice + f32 scale sideband via all_gather and a
+# fused unpack-reduce (kernels/pack.py, DESIGN.md §3.13).
+WIRE_DTYPES = ("f32", "bf16", "packed8", "packed4")
 
 BACKENDS = ("reference", "pallas")
 _ENV_VAR = "REPRO_COMPRESSION_BACKEND"
@@ -221,7 +229,9 @@ class CompressionBackend:
 
     def wire_exchange(self, rows: jax.Array, start_block: jax.Array, *,
                       k_blocks: int, block_rows: int,
-                      axes: tuple[str, ...], weight: jax.Array | None = None):
+                      axes: tuple[str, ...], weight: jax.Array | None = None,
+                      wire_dtype: str = "f32", levels: int | None = None,
+                      quant_u: jax.Array | None = None):
         """One level of the (possibly hierarchical) shared wire: circular
         gather of the k-row slab, then the sparse collective over `axes`.
 
@@ -235,11 +245,83 @@ class CompressionBackend:
         exactly 1.0) scales this rank's contribution to the collective mean —
         the buffered-async / elastic-masking hook. Own vals stay unweighted so
         local shift updates use the client's actual message.
+
+        Transport (`wire_dtype`, DESIGN.md §3.13):
+
+        'f32'      the status quo: psum the value slab. With `levels` set the
+                   slab is first quantized through the SAME pack->unpack pair
+                   the packed modes use — the bit-match reference for them,
+                   and a QSGD-on-the-wire mode in its own right.
+        'bf16'     psum the slab at bf16 (2 B/lane, lossy); own vals are the
+                   bf16 round-trip so shift updates see what the wire moved.
+        'packed8'  quantize (levels <= 127) and all_gather the biased byte
+                   lattice + f32 per-row scale sideband, then ONE fused
+                   unpack-accumulate kernel forms the mean (a psum of packed
+                   ints would be wrong — scales are per rank). Elastic
+                   weights fold into the scale sideband, so no extra
+                   collective; q_own decodes this rank's own slab with the
+                   UNWEIGHTED scale.
+        'packed4'  same, two rows per byte (levels <= 7).
+
+        `quant_u` are the shared stochastic-rounding uniforms (slab-shaped),
+        drawn by the caller from the level key + WIRE_QUANT_SALT; required
+        iff `levels` is set.
         """
         vals = self.wire_compress(rows, start_block, k_blocks=k_blocks,
                                   block_rows=block_rows)
+        if wire_dtype in ("packed8", "packed4"):
+            nib = wire_dtype == "packed4"
+            packed, scales = self.pack_slab(vals, quant_u, levels=levels,
+                                            nibble=nib)
+            own = self.unpack_slab(packed, scales, levels=levels,
+                                   n_rows=vals.shape[0], nibble=nib)
+            wscales = scales if weight is None else scales * weight
+            gathered_p = jax.lax.all_gather(packed, axes)
+            gathered_s = jax.lax.all_gather(wscales, axes)
+            mean = self.unpack_reduce(gathered_p, gathered_s, levels=levels,
+                                      n_rows=vals.shape[0], nibble=nib)
+            return own, mean
+        if levels is not None:
+            # f32 transport of the quantized payload: round-trip through the
+            # pack kernels so every byte/scale is bitwise identical to what
+            # the packed transport would move (the lossless-levels argument)
+            packed, scales = self.pack_slab(vals, quant_u, levels=levels)
+            vals = self.unpack_slab(packed, scales, levels=levels,
+                                    n_rows=vals.shape[0])
+        if wire_dtype == "bf16":
+            own = vals.astype(jnp.bfloat16).astype(jnp.float32)
+            shared = own if weight is None else own * weight
+            mean = jax.lax.pmean(shared.astype(jnp.bfloat16), axes)
+            return own, mean.astype(jnp.float32)
         shared = vals if weight is None else vals * weight
         return vals, jax.lax.pmean(shared, axes)
+
+    def pack_slab(self, vals: jax.Array, u: jax.Array, *, levels: int,
+                  nibble: bool = False):
+        """Quantize + bit-pack a wire slab -> (packed uint8, f32 scales)."""
+        if self.is_pallas:
+            return pack_slab(vals, u, levels=levels, nibble=nibble,
+                             interpret=self.interpret)
+        return ref.pack_slab_ref(vals, u, levels=levels, nibble=nibble,
+                                 block_rows=BLOCK_ROWS)
+
+    def unpack_slab(self, packed: jax.Array, scales: jax.Array, *,
+                    levels: int, n_rows: int, nibble: bool = False):
+        """Decode one packed slab back to (n_rows, D) f32 values."""
+        if self.is_pallas:
+            return unpack_slab(packed, scales, levels=levels, n_rows=n_rows,
+                               nibble=nibble, interpret=self.interpret)
+        return ref.unpack_slab_ref(packed, scales, levels=levels,
+                                   n_rows=n_rows, nibble=nibble)
+
+    def unpack_reduce(self, packed: jax.Array, scales: jax.Array, *,
+                      levels: int, n_rows: int, nibble: bool = False):
+        """All-gathered packed slabs + scales -> fused f32 mean slab."""
+        if self.is_pallas:
+            return unpack_reduce(packed, scales, levels=levels, n_rows=n_rows,
+                                 nibble=nibble, interpret=self.interpret)
+        return ref.unpack_reduce_ref(packed, scales, levels=levels,
+                                     n_rows=n_rows, nibble=nibble)
 
     def wire_compress(self, rows: jax.Array, start_block: jax.Array, *,
                       k_blocks: int, block_rows: int) -> jax.Array:

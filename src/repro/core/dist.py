@@ -81,9 +81,45 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.compression.backend import BLOCK_ROWS, get_backend
+from repro.compression.backend import BLOCK_ROWS, WIRE_DTYPES, get_backend
 from repro.core.rules import WIRE_RULES, ShiftRule
-from repro.core.salts import POD_KEY_SALT
+from repro.core.salts import POD_KEY_SALT, WIRE_QUANT_SALT
+
+# Biased-byte representation caps: 2*levels + 1 distinct lattice points must
+# fit the lane (256 byte values / 16 nibble values) — the lossless-levels
+# bound of DESIGN.md §3.13. Packed wires default to the largest level count
+# their lane can carry losslessly.
+_WIRE_LEVEL_CAPS = {"packed8": 127, "packed4": 7}
+
+
+def payload_itemsize(wire_dtype: str, rule: ShiftRule,
+                     leaf_dtype=jnp.float32) -> float:
+    """Bytes per slab element one rank puts on the shared wire.
+
+    The single accounting authority for the wire's transport width — dist's
+    `wire_bytes_per_round`, the fleet driver's bit charging, and the jaxpr
+    census all derive from it, so the three byte accountings cannot drift.
+
+    f32 transport: stateful rules (diana/diana_rr/ef) psum f32 payloads; the
+    memory-free 'q' slabs travel at leaf dtype. bf16 halves the lane. The
+    packed modes move one byte per element (packed8) or one byte per TWO
+    row-paired elements (packed4 -> 0.5); their f32 per-row scale sideband
+    is accounted separately (`scale_sideband_bytes`).
+    """
+    if wire_dtype == "bf16":
+        return 2
+    if wire_dtype == "packed8":
+        return 1
+    if wire_dtype == "packed4":
+        return 0.5
+    return 4 if rule.has_shifts else jnp.dtype(leaf_dtype).itemsize
+
+
+def scale_sideband_bytes(wire_dtype: str, slab_rows: int) -> int:
+    """Bytes of the packed wire's f32 per-row scale sideband (0 otherwise)."""
+    if wire_dtype in _WIRE_LEVEL_CAPS:
+        return 4 * slab_rows
+    return 0
 
 
 class DianaState(NamedTuple):
@@ -130,6 +166,14 @@ class CompressedAggregation:
     # the resident mean shift tracks the population mean h_bar instead of
     # (C/M)*h_bar (DESIGN.md §3.10); 1.0 = the paper's full-participation form.
     backend: str | None = None  # 'reference' | 'pallas' | None (env/default)
+    wire_dtype: str = "f32"  # slab transport: 'f32'|'bf16'|'packed8'|'packed4'
+    # (applies to BOTH wire levels; DESIGN.md §3.13). 'f32' + wire_levels=None
+    # is the bitwise status quo.
+    wire_levels: int | None = None  # stochastic-quantization levels for the
+    # slab (None -> unquantized f32/bf16; packed modes default to their lane
+    # cap: 127 for packed8, 7 for packed4). Orthogonal to wire_dtype: 'f32'
+    # with levels set moves the SAME quantized payload at 4 B/lane — the
+    # bit-match reference for the packed transports.
 
     def __post_init__(self):
         if self.method not in WIRE_RULES:
@@ -139,6 +183,39 @@ class CompressedAggregation:
             raise ValueError(f"n_slots={self.n_slots}")
         if self.pod_slots is not None and self.pod_slots < 1:
             raise ValueError(f"pod_slots={self.pod_slots}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}; "
+                             f"options: {WIRE_DTYPES}")
+        if self.wire_dtype != "f32" or self.wire_levels is not None:
+            if self.method == "dense":
+                raise ValueError(
+                    "method 'dense' has no compressed slab; wire_dtype must "
+                    "stay 'f32' with wire_levels=None")
+            if self.wire != "shared":
+                raise ValueError(
+                    "bf16/packed/quantized transport needs the shared wire "
+                    f"(wire={self.wire!r} moves dense leaves, not slabs)")
+        if self.wire_dtype == "bf16" and self.wire_levels is not None:
+            raise ValueError(
+                "wire_levels with bf16 transport is ambiguous (quantize to a "
+                "lattice, then round the lattice to bf16?) — pick one of "
+                "'f32'+levels (QSGD wire) or plain 'bf16'")
+        cap = _WIRE_LEVEL_CAPS.get(self.wire_dtype)
+        if self.wire_levels is not None:
+            if self.wire_levels < 1:
+                raise ValueError(f"wire_levels={self.wire_levels}")
+            if cap is not None and self.wire_levels > cap:
+                raise ValueError(
+                    f"wire_levels={self.wire_levels} overflows the "
+                    f"{self.wire_dtype} lane: 2*levels+1 lattice points must "
+                    f"fit, so levels <= {cap}")
+
+    @property
+    def _quant_levels(self) -> int | None:
+        """Effective quantization level count (packed lanes default full)."""
+        if self.wire_levels is not None:
+            return self.wire_levels
+        return _WIRE_LEVEL_CAPS.get(self.wire_dtype)
 
     @property
     def _pod_slots(self) -> int:
@@ -432,15 +509,28 @@ class CompressedAggregation:
         feedback requires; the d/k-scaled reconstruction makes the EF
         residual grow instead of contract. `weight` scales this rank's slab
         into the collective mean only (q_own stays unweighted).
+
+        Transport is `wire_dtype`/`wire_levels` (DESIGN.md §3.13): when the
+        slab is quantized, the stochastic-rounding uniforms come from the
+        level key + WIRE_QUANT_SALT — shared across the level's ranks like
+        the window draw, so every rank agrees on the byte lattice.
         """
         del fold_axes  # shared draw: every rank uses the same key
         be = get_backend(self.backend)
         rows = self._pad_rows(self._row_view(delta))
         nb, kb = self._wire_geometry(rows.shape[0], fraction)
         start_block = jax.random.randint(key, (), 0, nb)
+        levels = self._quant_levels
+        quant_u = None
+        if levels is not None:
+            qkey = jax.random.fold_in(key, WIRE_QUANT_SALT)
+            quant_u = jax.random.uniform(
+                qkey, (kb * BLOCK_ROWS, rows.shape[1]))
         vals, mean_vals = be.wire_exchange(rows, start_block, k_blocks=kb,
                                            block_rows=BLOCK_ROWS, axes=axes,
-                                           weight=weight)
+                                           weight=weight,
+                                           wire_dtype=self.wire_dtype,
+                                           levels=levels, quant_u=quant_u)
         if contractive:
             vals = vals * (kb / nb)
             mean_vals = mean_vals * (kb / nb)
@@ -487,11 +577,16 @@ class CompressedAggregation:
     def wire_bytes_per_round(self, params) -> dict[str, int]:
         """Bytes one rank contributes to each wire level per round.
 
-        'intra_pod' is the inner shared-wire slab (k-row blocks, f32);
+        'intra_pod' is the inner shared-wire slab (k-row blocks);
         'inter_pod' the outer level's slab; 'dense' what an uncompressed
-        psum of the same tree would move. The shared wire's sparse psum
-        moves exactly the compressed slab; the independent wire moves the
+        psum of the same tree would move. The shared wire's sparse
+        collective moves exactly the compressed slab — at the transport
+        width of `wire_dtype` (`payload_itemsize`), plus the packed modes'
+        f32 per-row scale sideband — while the independent wire moves the
         dense size regardless of k (the zeros travel — DESIGN.md §3.1).
+        The jaxpr census (analysis/graph.py) pins the compiled step's
+        collective payloads against these numbers exactly, and the fleet
+        driver charges `FedState.bits` from them.
         """
         dense = intra = inter = 0
         for leaf in jax.tree.leaves(params):
@@ -502,16 +597,18 @@ class CompressedAggregation:
             dense += rows * cols * jnp.dtype(leaf.dtype).itemsize
             if self.method == "dense" or self.wire == "independent":
                 continue
-            # stateful wires (diana/diana_rr/ef) psum f32 payloads; the
-            # memory-free 'q' slabs travel at leaf dtype
-            slab_item = 4 if self.rule.has_shifts else jnp.dtype(
-                leaf.dtype).itemsize
-            nb, kb = self._wire_geometry(padded, self.fraction)
+            item = payload_itemsize(self.wire_dtype, self.rule, leaf.dtype)
+
+            def slab_bytes(fraction):
+                _, kb = self._wire_geometry(padded, fraction)
+                slab_rows = kb * BLOCK_ROWS
+                return int(slab_rows * cols * item) + scale_sideband_bytes(
+                    self.wire_dtype, slab_rows)
+
             if self.client_axes:
-                intra += kb * BLOCK_ROWS * cols * slab_item
+                intra += slab_bytes(self.fraction)
             if self.pod_axes and self.pod_size > 1:
-                nb, kb = self._wire_geometry(padded, self._pod_fraction)
-                inter += kb * BLOCK_ROWS * cols * slab_item
+                inter += slab_bytes(self._pod_fraction)
         if self.method != "dense" and self.wire == "independent":
             intra = dense if self.client_axes else 0
             inter = dense if (self.pod_axes and self.pod_size > 1) else 0

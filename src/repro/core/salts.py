@@ -48,6 +48,13 @@ def registered_salts() -> dict[str, int]:
 # levels' coordinate draws must be independent (the composed variance bound
 # is a tower-rule product of two independent expectations)
 POD_KEY_SALT = _register("POD_KEY_SALT", 0x70D5)
+# folded into the per-leaf wire key to derive the stochastic-rounding uniforms
+# of the quantized/packed wire (wire_levels / wire_dtype on
+# CompressedAggregation): the rounding draw must be independent of the
+# coordinate-window draw that shares the same leaf key, and — like the window
+# — SHARED across the level's ranks, so every rank packs and unpacks the same
+# byte lattice
+WIRE_QUANT_SALT = _register("WIRE_QUANT_SALT", 0xB175)
 
 # -- NASTYA sub-streams (repro.launch.steps) ---------------------------------
 # the round key rkey = fold_in(key, step) splits into per-purpose sub-streams:

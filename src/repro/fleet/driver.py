@@ -148,6 +148,7 @@ class FleetRunner:
         wire = agg.wire_bytes_per_round(abstract.params)
         self._bits_per_client = 8.0 * (
             wire["intra_pod"] if agg.client_axes else wire["inter_pod"])
+        self._wire_dtype = agg.wire_dtype
 
     @property
     def store(self) -> ClientStateStore:
@@ -163,7 +164,8 @@ class FleetRunner:
         checkpoint manifest (`checkpoint.save_fleet_checkpoint`)."""
         meta = {**self._stream.cursor_meta(),
                 "store": self._store.spec(),
-                "bits_per_client_round": self._bits_per_client}
+                "bits_per_client_round": self._bits_per_client,
+                "wire_dtype": self._wire_dtype}
         if self._pager is not None:
             meta["data_store"] = self._pager.data.spec()
         return meta

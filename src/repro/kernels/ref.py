@@ -68,6 +68,65 @@ def randk_mask_ref(x: jax.Array, starts: jax.Array, *, d: int, k: int) -> jax.Ar
     return jnp.where(inside, x.astype(jnp.float32) * (d / k), 0.0).astype(x.dtype)
 
 
+def _pad_rows_ref(x, block_rows: int):
+    pad = (-x.shape[0]) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+def pack_slab_ref(vals: jax.Array, u: jax.Array, *, levels: int,
+                  nibble: bool = False, block_rows: int = 8):
+    """Quantize + bit-pack one wire slab (oracle for kernels/pack.py).
+
+    vals, u: (K, D); rows pad to a `block_rows` multiple. Per-row max-abs
+    scale, stochastic rounding to q in [-levels, levels], biased byte
+    b = q + levels. nibble=True packs two consecutive ROWS per byte
+    (lo | hi<<4). Returns (packed uint8, scales (Kp, 1) f32)."""
+    x = _pad_rows_ref(vals.astype(jnp.float32), block_rows)
+    ut = _pad_rows_ref(u, block_rows)
+    s = float(levels)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True) + 1e-30
+    y = jnp.abs(x) / amax * s
+    f = jnp.floor(y)
+    q = jnp.minimum(f + (ut < (y - f)).astype(jnp.float32), s)
+    b = (jnp.sign(x) * q + s).astype(jnp.int32)
+    if nibble:
+        kp, d = b.shape
+        br = b.reshape(kp // 2, 2, d)
+        b = br[:, 0, :] + 16 * br[:, 1, :]
+    return b.astype(jnp.uint8), (amax / s).astype(jnp.float32)
+
+
+def _decode_ref(packed: jax.Array, scales: jax.Array, levels: int,
+                nibble: bool) -> jax.Array:
+    b = packed.astype(jnp.int32)
+    if nibble:
+        prows, d = b.shape
+        b = jnp.stack([b % 16, b // 16], axis=1).reshape(prows * 2, d)
+    return (b.astype(jnp.float32) - float(levels)) * scales
+
+
+def unpack_slab_ref(packed: jax.Array, scales: jax.Array, *, levels: int,
+                    n_rows: int, nibble: bool = False) -> jax.Array:
+    """Decode one packed slab: v = (b - levels) * scale, trimmed to n_rows."""
+    return _decode_ref(packed, scales, levels, nibble)[:n_rows]
+
+
+def unpack_reduce_ref(packed: jax.Array, scales: jax.Array, *, levels: int,
+                      n_rows: int, nibble: bool = False) -> jax.Array:
+    """(R, Kp[/2], D) packed + (R, Kp, 1) scales -> (n_rows, D) mean slab.
+
+    Accumulates decoded slabs in RANK ORDER (r = 0..R-1) then divides by R —
+    the exact float schedule of the fused kernel, which in turn bit-matches
+    `lax.pmean` of the decoded slabs on power-of-two rank counts."""
+    r = packed.shape[0]
+    acc = _decode_ref(packed[0], scales[0], levels, nibble)
+    for i in range(1, r):
+        acc = acc + _decode_ref(packed[i], scales[i], levels, nibble)
+    return (acc / float(r))[:n_rows]
+
+
 def diana_shift_update_ref(h, q_own, mh, q_mean, alpha: float,
                            beta: float | None = None):
     """Fused DIANA state update (Algorithm 3/5 lines 7-11):

@@ -211,6 +211,7 @@ def fleet_smoke(cfg, mesh, agg, clients: int, *, local_steps: int = 1,
 
 def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
                agg_method: str = "diana", agg_wire: str = "shared",
+               wire_dtype: str = "f32",
                fraction: float = 0.02, remat="full", ce: str = "gather",
                seq_shard: bool = True, probes: bool = True,
                local_steps: int = 1, clients: int | None = None,
@@ -241,7 +242,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
     # diana_rr at the dry-run scale: a representative 8-slot shift table
     # (the real n comes from the data; the compile only needs the layout)
     agg = CompressedAggregation(method=agg_method, wire=agg_wire,
-                                fraction=fraction,
+                                fraction=fraction, wire_dtype=wire_dtype,
                                 n_slots=8 if agg_method == "diana_rr" else 1)
     n_dev = mesh.devices.size
 
@@ -266,7 +267,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
         "status": "ok",
         "n_devices": n_dev,
         "clients": m,
-        "agg": {"method": agg_method, "wire": agg_wire, "fraction": fraction},
+        "agg": {"method": agg_method, "wire": agg_wire, "fraction": fraction,
+                "wire_dtype": wire_dtype},
         "remat": str(remat),
         "ce": ce,
         "seq_shard": seq_shard,
@@ -336,6 +338,10 @@ def main(argv=None):
                     choices=("dense", "q", "diana", "diana_rr", "ef"))
     ap.add_argument("--wire", default="shared",
                     choices=("shared", "independent"))
+    ap.add_argument("--wire-dtype", default="f32",
+                    choices=("f32", "bf16", "packed8", "packed4"),
+                    help="transport dtype for the shared wire slab "
+                         "(DESIGN.md §3.13)")
     ap.add_argument("--fraction", type=float, default=0.02)
     ap.add_argument("--remat", default="full", choices=("full", "dots", "none"))
     ap.add_argument("--ce", default="gather", choices=("streaming", "gather"))
@@ -381,7 +387,8 @@ def main(argv=None):
             try:
                 res = lower_pair(
                     arch, shape, multi_pod=multi, agg_method=args.agg,
-                    agg_wire=args.wire, fraction=args.fraction,
+                    agg_wire=args.wire, wire_dtype=args.wire_dtype,
+                    fraction=args.fraction,
                     remat=args.remat, ce=args.ce, seq_shard=args.seq_shard,
                     probes=not args.no_probes, local_steps=args.local_steps,
                     clients=args.clients, buffer_k=args.buffer_k,

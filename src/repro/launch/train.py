@@ -263,6 +263,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "paper's per-slot shifts (Algorithm 3) and needs "
                          "--sampling rr_shared, 'ef' is error feedback")
     ap.add_argument("--wire", choices=("shared", "independent"), default="shared")
+    ap.add_argument("--wire-dtype",
+                    choices=("f32", "bf16", "packed8", "packed4"),
+                    default="f32",
+                    help="shared-wire slab transport: 'packed8'/'packed4' "
+                         "bit-pack quantized levels and all_gather the byte "
+                         "lattice + f32 scale sideband (DESIGN.md §3.13); "
+                         "'bf16' halves the psum lanes")
     # the paper's headline compression ratio (k/d ~= 0.02, Sec. 3) — must
     # stay in sync with the module-docstring example above
     ap.add_argument("--fraction", type=float, default=0.02)
@@ -382,7 +389,8 @@ def main():
                                 fraction=args.fraction,
                                 n_slots=n_batches if slotted else 1,
                                 mean_scale=mean_scale,
-                                shift_dtype=jnp.float32)
+                                shift_dtype=jnp.float32,
+                                wire_dtype=args.wire_dtype)
     remat = "full" if args.production_mesh else False
     jitted, abstract, shardings, batch_sh = steps.make_train_step(
         cfg, mesh, agg=agg, lr=args.lr, eta=args.eta,
@@ -390,7 +398,9 @@ def main():
         optimizer=args.optimizer, elastic=fleet_is_async(args))
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
     print(f"arch={cfg.name} ({n_params/1e6:.1f}M params) clients={m} "
-          f"agg={args.agg}/{args.wire} k/d={args.fraction} "
+          f"agg={args.agg}/{args.wire}"
+          + (f"/{args.wire_dtype}" if args.wire_dtype != "f32" else "")
+          + f" k/d={args.fraction} "
           f"local_steps={args.local_steps} opt={args.optimizer}"
           + (f" fleet=C{args.clients}/{args.cohort_mode}"
              if args.clients is not None else ""))

@@ -194,6 +194,19 @@ def test_kernel_import_allowed_in_backend_and_kernels():
     assert lint_source(src, "src/repro/kernels/ops.py") == []
 
 
+def test_pack_kernel_import_only_via_backend():
+    """The new pack/unpack kernels obey the same boundary: reachable from
+    the compression backend (and within repro/kernels/), a lint error
+    anywhere else — callers must go through `wire_exchange`."""
+    src = "from repro.kernels.pack import pack_slab\n"
+    assert lint_source(src, "src/repro/compression/backend.py") == []
+    assert lint_source(src, "src/repro/kernels/ref.py") == []
+    f = _lint("""
+        from repro.kernels.pack import pack_slab
+    """, rel="src/repro/core/dist.py")
+    assert _rules(f) == ["kernel-import"]
+
+
 # -- layer 1: trace hazards ---------------------------------------------------
 
 
@@ -445,6 +458,67 @@ def test_census_full_checks_clean_on_tp1(census_cfg, label, shape, axes):
     findings = []
     for method in graph.CENSUS_METHODS:
         findings.extend(graph.check_step(census_cfg, mesh, method, label))
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+@pytest.mark.parametrize("method", ["q", "diana_rr"])
+def test_census_packed_all_gather_counts_flat_mesh(census_cfg, mesh_4x2,
+                                                   method):
+    """Packed wire on the TP=2 mesh: the slab travels as all_gathers — TWO
+    per leaf (bytes + scale sideband), all over "data" — and ZERO psums
+    touch the wire axes (the packed wire replaces the collective, it does
+    not add one)."""
+    import jax
+
+    from repro.analysis import graph
+
+    traced, _, abstract, _ = graph._trace_step(census_cfg, mesh_4x2, method,
+                                               wire_dtype="packed8")
+    jxp = traced.jaxpr.jaxpr
+    L = len(jax.tree.leaves(abstract.params))
+    gathers = graph.collective_census(jxp, primitive="all_gather")
+    assert set(gathers) == {("data",)}
+    assert gathers[("data",)][0] == 2 * L
+    psums = graph.collective_census(jxp, primitive="psum")
+    assert ("data",) not in psums and ("pod",) not in psums
+
+
+def test_census_packed_all_gather_counts_two_pod_mesh(census_cfg,
+                                                      mesh_2x2x2):
+    """Both wire levels packed: 2L all_gathers over "data" AND over "pod",
+    no wire-axis psums anywhere."""
+    import jax
+
+    from repro.analysis import graph
+
+    traced, _, abstract, _ = graph._trace_step(
+        census_cfg, mesh_2x2x2, "diana_rr", wire_dtype="packed8")
+    jxp = traced.jaxpr.jaxpr
+    L = len(jax.tree.leaves(abstract.params))
+    gathers = graph.collective_census(jxp, primitive="all_gather")
+    assert set(gathers) == {("data",), ("pod",)}
+    assert gathers[("data",)][0] == 2 * L
+    assert gathers[("pod",)][0] == 2 * L
+    psums = graph.collective_census(jxp, primitive="psum")
+    assert ("data",) not in psums and ("pod",) not in psums
+
+
+@pytest.mark.parametrize("wire_dtype", ["packed8", "packed4", "bf16"])
+@pytest.mark.parametrize("label,shape,axes", [
+    ("flat", (4, 1), ("data", "model")),
+    ("two_pod", (2, 2, 1), ("pod", "data", "model")),
+])
+def test_census_full_checks_clean_packed_tp1(census_cfg, label, shape, axes,
+                                             wire_dtype):
+    """check_step's packed/bf16 points (TP=1: collective payload bytes ==
+    the analytic packed accounting exactly, stray-primitive sweep) report
+    nothing on either CLI mesh."""
+    from repro.analysis import graph
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(shape, axes)
+    findings = graph.check_step(census_cfg, mesh, "diana", label,
+                                wire_dtype=wire_dtype)
     assert findings == [], "\n".join(str(f) for f in findings)
 
 

@@ -121,6 +121,116 @@ def test_two_pod_wire_differs_from_flat(mesh_4x2, mesh_2x2x2):
 
 
 # ---------------------------------------------------------------------------
+# packed transports: bit-match the f32 wire at equal levels (DESIGN.md §3.13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["q", "diana", "diana_rr"])
+def test_packed8_bit_matches_f32_wire(method, mesh_4x2):
+    """The tentpole guarantee: wire_dtype is transport, not math. Both modes
+    round-trip the slab through the same pack->unpack kernels (same byte,
+    same scale, same multiply), so moving the int8 lattice instead of the
+    dequantized f32 slab changes NOTHING in the trajectory — params and
+    shift state bitwise identical for every lossless shift rule."""
+    n_slots = 3 if method == "diana_rr" else 1
+    slots = np.arange(5) % 3 if method == "diana_rr" else None
+    base = CompressedAggregation(method=method, wire="shared", fraction=0.25,
+                                 n_slots=n_slots, shift_dtype=jnp.float32,
+                                 wire_dtype="f32", wire_levels=127)
+    packed = dataclasses.replace(base, wire_dtype="packed8", wire_levels=None)
+    want = _run_rounds(base, mesh_4x2, 5, slots=slots)
+    got = _run_rounds(packed, mesh_4x2, 5, slots=slots)
+    for k in GRADS:
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+
+
+def test_packed8_bit_matches_f32_wire_two_pod(mesh_2x2x2):
+    """Same guarantee with both wire levels live (2 pods): the inter-pod
+    exchange packs and reduces with its own slab geometry and must stay
+    bitwise exact too."""
+    base = CompressedAggregation(method="diana_rr", wire="shared",
+                                 fraction=0.25, n_slots=2,
+                                 shift_dtype=jnp.float32,
+                                 wire_dtype="f32", wire_levels=127)
+    packed = dataclasses.replace(base, wire_dtype="packed8", wire_levels=None)
+    slots = np.arange(4) % 2
+    want = _run_rounds(base, mesh_2x2x2, 4, slots=slots)
+    got = _run_rounds(packed, mesh_2x2x2, 4, slots=slots)
+    for k in GRADS:
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+
+
+def test_packed4_bit_matches_f32_wire(mesh_4x2):
+    """The nibble lane at its lossless cap L=7: two rows per byte on the
+    wire, still bitwise identical to f32 transport at the same levels."""
+    base = CompressedAggregation(method="diana", wire="shared", fraction=0.25,
+                                 shift_dtype=jnp.float32,
+                                 wire_dtype="f32", wire_levels=7)
+    packed = dataclasses.replace(base, wire_dtype="packed4", wire_levels=None)
+    want = _run_rounds(base, mesh_4x2, 3)
+    got = _run_rounds(packed, mesh_4x2, 3)
+    for k in GRADS:
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+
+
+def test_bf16_wire_close_to_f32(mesh_4x2):
+    """bf16 transport is lossy (8 mantissa bits): no bit-match claim, but
+    one round's direction must sit within downcast tolerance of the f32
+    wire — the rounding enters only at the slab edges, not compounded."""
+    base = CompressedAggregation(method="diana", wire="shared", fraction=0.25,
+                                 shift_dtype=jnp.float32)
+    bf = dataclasses.replace(base, wire_dtype="bf16")
+    want = _run_rounds(base, mesh_4x2, 1)
+    got = _run_rounds(bf, mesh_4x2, 1)
+    rel = {}
+    for k in GRADS:
+        w = np.asarray(want[k])
+        scale = np.abs(w).max() + 1e-12
+        rel[k] = np.abs(np.asarray(got[k]) - w).max() / scale
+        assert rel[k] < 1e-2, (k, rel[k])
+    # the downcast is real: somewhere it must have rounded ("b" is all-ones,
+    # exactly representable in bf16, so only "w" is guaranteed to move)
+    assert max(rel.values()) > 0, rel
+
+
+def test_packed_wire_byte_accounting(mesh_4x2):
+    """True bytes on the wire: packed8 moves exactly slab/4 plus the 4B
+    per-row f32 scale sideband (packed4 slab/8 + the same sideband) — the
+    analytic identity the jaxpr census pins against the lowered step. On a
+    matrix leaf the sideband is the +1/D term, keeping the total under
+    0.26x / 0.135x of the f32 slab; 1-D cols=1 leaves pay the sideband per
+    element and are a net LOSS (DESIGN.md §3.13)."""
+    from repro.compression.backend import BLOCK_ROWS as BR
+    from repro.core.dist import scale_sideband_bytes
+
+    local = {"w": jnp.zeros((64, 128), jnp.float32)}
+    aggs = {
+        wd: _configure(
+            CompressedAggregation(method="diana", wire="shared",
+                                  fraction=0.25, shift_dtype=jnp.float32,
+                                  wire_dtype=wd), mesh_4x2)
+        for wd in ("f32", "bf16", "packed8", "packed4")
+    }
+    bytes_ = {wd: agg.wire_bytes_per_round(local)["intra_pod"]
+              for wd, agg in aggs.items()}
+    nb = 64 // BR
+    slab_rows = max(1, int(0.25 * nb)) * BR
+    sideband = scale_sideband_bytes("packed8", slab_rows)
+    assert sideband == 4 * slab_rows
+    assert bytes_["f32"] == slab_rows * 128 * 4
+    assert bytes_["bf16"] == bytes_["f32"] // 2
+    assert bytes_["packed8"] == bytes_["f32"] // 4 + sideband
+    assert bytes_["packed4"] == bytes_["f32"] // 8 + sideband
+    assert bytes_["packed8"] / bytes_["f32"] <= 0.26
+    assert bytes_["packed4"] / bytes_["f32"] <= 0.135
+
+    # the cols=1 caveat: a 1-D leaf's packed "compression" is a net loss
+    flat = {"w": jnp.zeros((8192,), jnp.float32)}
+    f32_flat = aggs["f32"].wire_bytes_per_round(flat)["intra_pod"]
+    p8_flat = aggs["packed8"].wire_bytes_per_round(flat)["intra_pod"]
+    assert p8_flat > f32_flat
+
+
+# ---------------------------------------------------------------------------
 # statistics: unbiased, composed variance bound (1+w1)(1+w2)
 # ---------------------------------------------------------------------------
 
