@@ -792,6 +792,81 @@ def run_fleet_paging_bench(*, quick: bool, reps: int):
     return out
 
 
+def run_telemetry_bench(*, quick: bool, reps: int):
+    """Telemetry on-vs-off overhead around a busy host round loop.
+
+    Each round does real jitted device work (a chain of d x d matmuls,
+    tens of ms on this CPU backend — the dispatch window of a small train
+    step) and, when a sink is installed, emits the per-round event mix the
+    fleet drivers produce: one span, one counter, one round_metrics
+    carrying live jax scalars. The per-round cost when on is dominated by
+    the writer thread forcing those two scalars (~0.1ms each here) — a
+    fetch the round's logging pays anyway in a real run — so the busy step
+    must be train-step-sized for the ratio to mean anything. The committed
+    gate is ABSOLUTE: overhead_frac <= 3% at both scales, the §3.14
+    budget. Reported per scale:
+
+      off_s / on_s      median s/round without / with an active file sink
+      overhead_frac     on/off - 1 (clamped at 0 for timer noise)
+    """
+    import tempfile
+
+    from repro import telemetry
+
+    scales = {"small": (512, 12), "large": (640, 8)} if quick else \
+        {"small": (640, 16), "large": (768, 10)}
+    out = {}
+    print("\n-- telemetry: event-pipeline overhead (on vs off) --")
+    for name, (d, rounds) in scales.items():
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(d, d)),
+                        jnp.float32)
+
+        @jax.jit
+        def step(a, _d=jnp.float32(d)):
+            for _ in range(8):
+                a = a @ a.T / _d  # renormalize: no overflow across rounds
+            return a
+
+        step(x).block_until_ready()  # compile outside the timed window
+
+        def run_rounds():
+            t0 = time.perf_counter()
+            for r in range(rounds):
+                y = step(x)
+                with telemetry.span("device_step", round=r):
+                    y.block_until_ready()
+                telemetry.counter("fleet.uplink_bits", 8.0 * d * d, round=r)
+                telemetry.round_metrics(
+                    r, {"loss": y[0, 0], "grad_norm": y[1, 1]})
+            return (time.perf_counter() - t0) / rounds
+
+        def timed(active):
+            times = []
+            for _ in range(reps):
+                if active:
+                    with tempfile.NamedTemporaryFile(
+                            suffix=".telemetry.jsonl") as tf:
+                        sink = telemetry.install(
+                            telemetry.MetricsSink(tf.name))
+                        try:
+                            times.append(run_rounds())
+                        finally:
+                            telemetry.uninstall()
+                            sink.close()
+                else:
+                    times.append(run_rounds())
+            return float(np.median(times))
+
+        off_s = timed(False)
+        on_s = timed(True)
+        overhead = max(0.0, on_s / off_s - 1.0)
+        print(f"{name}: off {fmt(off_s)}/round  on {fmt(on_s)}/round  "
+              f"overhead {100 * overhead:.2f}%")
+        out[name] = {"d": d, "rounds": rounds, "off_s": off_s,
+                     "on_s": on_s, "overhead_frac": overhead}
+    return out
+
+
 def check_baseline(results: dict, baseline_path: str) -> bool:
     """CI guard: fail when the Rand-k speedups regress below the committed
     BENCH_compression.json, or the packed wire's byte ratios grow.
@@ -846,6 +921,19 @@ def check_baseline(results: dict, baseline_path: str) -> bool:
             ok = ok and c <= b * 1.01
     else:
         print("baseline has no wire_packed section; skipping byte-ratio gate")
+    # telemetry overhead gates at an ABSOLUTE budget (DESIGN.md §3.14), not
+    # a committed ratio: the zero-cost-when-off pipeline must stay under 3%
+    # on-vs-off regardless of what any past run measured
+    tel = results.get("telemetry")
+    if tel:
+        for scale, r in sorted(tel.items()):
+            status = "ok" if r["overhead_frac"] <= 0.03 else "REGRESSED"
+            print(f"baseline gate telemetry/{scale} overhead: "
+                  f"{100 * r['overhead_frac']:.2f}% (budget 3.00%) "
+                  f"-> {status}")
+            ok = ok and r["overhead_frac"] <= 0.03
+    else:
+        print("no telemetry section; skipping overhead gate")
     return ok
 
 
@@ -915,6 +1003,9 @@ def main() -> None:
 
     results["fleet_paging"] = run_fleet_paging_bench(quick=args.quick,
                                                      reps=max(3, reps // 2))
+
+    results["telemetry"] = run_telemetry_bench(quick=args.quick,
+                                               reps=max(3, reps // 2))
 
     sp = results["scales"]["logreg"]["randk_speedup_pallas_vs_seed"]
     results["meta"]["elapsed_s"] = round(time.time() - t0, 1)

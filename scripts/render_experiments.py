@@ -1,4 +1,10 @@
-"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the grid JSONLs."""
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the grid JSONLs.
+
+`--telemetry RUN.telemetry.jsonl [--out PREFIX]` instead plots the run's
+loss and cumulative uplink-bits curves from a telemetry event stream
+(matplotlib when importable, CSV fallback otherwise).
+"""
+import argparse
 import json
 import sys
 
@@ -62,7 +68,75 @@ def dryrun_table():
     return "\n".join(out)
 
 
+def telemetry_curves(path: str, out_prefix: str):
+    """Loss-vs-round and loss-vs-cumulative-uplink-bits from one telemetry
+    stream: rounds come from `round_metrics`, bits from the drivers'
+    `fleet.uplink_bits` / `wire.uplink_bits` counters."""
+    from repro.telemetry import read_events
+
+    events = read_events(path)
+    rounds, losses = [], []
+    bits_by_round = {}
+    for ev in events:
+        if ev.get("kind") == "round_metrics":
+            loss = (ev.get("metrics") or {}).get("loss")
+            if isinstance(loss, (int, float)):
+                rounds.append(int(ev["round"]))
+                losses.append(float(loss))
+        elif (ev.get("kind") == "counter"
+              and ev.get("name", "").endswith("uplink_bits")):
+            r = ev.get("round")
+            if r is not None:
+                bits_by_round[int(r)] = (bits_by_round.get(int(r), 0.0)
+                                         + float(ev["value"]))
+    if not rounds:
+        raise SystemExit(f"{path}: no round_metrics with a numeric loss")
+    cum, total = [], 0.0
+    for r in rounds:
+        total += bits_by_round.get(r, 0.0)
+        cum.append(total)
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        csv = out_prefix + "_curves.csv"
+        with open(csv, "w") as f:
+            f.write("round,loss,cum_uplink_bits\n")
+            for r, l, b in zip(rounds, losses, cum):
+                f.write(f"{r},{l},{b}\n")
+        print(f"matplotlib unavailable: wrote {csv} "
+              f"({len(rounds)} rounds)")
+        return
+    fig, axes = plt.subplots(1, 2, figsize=(10, 4))
+    axes[0].plot(rounds, losses)
+    axes[0].set_xlabel("round")
+    axes[0].set_ylabel("loss")
+    axes[1].plot([b / 8e6 for b in cum], losses)
+    axes[1].set_xlabel("cumulative uplink MB")
+    axes[1].set_ylabel("loss")
+    for ax in axes:
+        ax.grid(True, alpha=0.3)
+    fig.suptitle(path)
+    fig.tight_layout()
+    png = out_prefix + "_curves.png"
+    fig.savefig(png, dpi=120)
+    print(f"wrote {png} ({len(rounds)} rounds, "
+          f"{cum[-1] / 8e6:.2f}MB uplink)")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--telemetry", default=None, metavar="JSONL",
+                    help="plot loss/uplink-bits curves from a telemetry "
+                         "stream instead of rendering EXPERIMENTS.md")
+    ap.add_argument("--out", default=None,
+                    help="output prefix for --telemetry plots "
+                         "(default: the stream path sans extension)")
+    args = ap.parse_args()
+    if args.telemetry:
+        prefix = args.out or args.telemetry.rsplit(".jsonl", 1)[0]
+        return telemetry_curves(args.telemetry, prefix)
     md = open("EXPERIMENTS.md").read()
     md = md.replace("TABLE-PLACEHOLDER-DRYRUN", dryrun_table())
     rows = load("results/dryrun_single.jsonl")

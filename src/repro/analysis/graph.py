@@ -68,6 +68,9 @@ RULES = {
         "a donated state buffer is not aliased in the lowered program",
     "census-elastic-invariant":
         "the elastic weights vector is not a live jaxpr input",
+    "census-telemetry-identity":
+        "installing a telemetry sink changed the traced step's jaxpr — "
+        "instrumentation leaked into the compiled program",
 }
 
 # Census points: every wire method on both topologies. TP=1 so payload
@@ -266,6 +269,30 @@ def check_elastic(cfg, mesh, label: str, method: str = "diana"
     return []
 
 
+def check_telemetry_identity(cfg, mesh, label: str, method: str = "diana"
+                             ) -> list[Finding]:
+    """The zero-cost-when-off claim, compiled form: tracing the step with
+    an active in-memory `MetricsSink` must yield a byte-identical jaxpr —
+    telemetry lives entirely on the host side of the jit boundary."""
+    from repro import telemetry
+
+    traced_off, _, _, _ = _trace_step(cfg, mesh, method)
+    sink = telemetry.install(telemetry.MetricsSink())
+    try:
+        traced_on, _, _, _ = _trace_step(cfg, mesh, method)
+    finally:
+        telemetry.uninstall()
+        sink.close()
+    where = f"jaxpr:{label}/{method}+telemetry"
+    if str(traced_off.jaxpr) != str(traced_on.jaxpr):
+        return [Finding(
+            file=where, line=0, rule="census-telemetry-identity",
+            message="the traced step's jaxpr differs with a telemetry sink "
+                    "installed — something threads host instrumentation "
+                    "through the compiled program")]
+    return []
+
+
 def run_census() -> list[Finding]:
     """The CLI entry point: every method on both topologies + elastic."""
     from repro.configs import get_config, reduced
@@ -286,4 +313,6 @@ def run_census() -> list[Finding]:
                                    CENSUS_MESHES[0][0],
                                    wire_dtype=wire_dtype))
     findings.extend(check_elastic(cfg, flat_mesh, CENSUS_MESHES[0][0]))
+    findings.extend(check_telemetry_identity(cfg, flat_mesh,
+                                             CENSUS_MESHES[0][0]))
     return sorted(findings)

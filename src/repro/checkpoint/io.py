@@ -17,6 +17,8 @@ import jax
 import msgpack
 import numpy as np
 
+from repro import telemetry
+
 _FORMAT_VERSION = 1
 
 
@@ -52,31 +54,33 @@ def save_pytree(path: str, tree: Any, *, step: int | None = None,
     """`meta`: optional JSON-serializable sidecar stored in the manifest —
     the train loop checkpoints the data-pipeline cursor (epoch, step) and
     sampler spec here so resume bit-reproduces the batch stream."""
-    paths, leaves, _ = _tree_paths(tree)
-    manifest = {"version": _FORMAT_VERSION, "step": step, "meta": meta,
-                "leaves": []}
-    payload = []
-    for p, leaf in zip(paths, leaves):
-        arr = np.asarray(leaf)
-        # bfloat16 has no portable numpy dtype string; save as raw u2 view
-        dtype = str(arr.dtype)
-        if dtype == "bfloat16":
-            raw = arr.view(np.uint16)
-            manifest["leaves"].append(
-                {"path": p, "dtype": "bfloat16", "shape": list(arr.shape)})
-            payload.append(raw.tobytes())
-        else:
-            manifest["leaves"].append(
-                {"path": p, "dtype": dtype, "shape": list(arr.shape)})
-            payload.append(arr.tobytes())
-    blob = msgpack.packb({"manifest": json.dumps(manifest),
-                          "buffers": payload})
-    d = os.path.dirname(os.path.abspath(path)) or "."
-    os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, suffix=".ckpt.tmp")
-    with os.fdopen(fd, "wb") as f:
-        f.write(blob)
-    os.replace(tmp, path)
+    with telemetry.span("checkpoint", op="save", path=path):
+        paths, leaves, _ = _tree_paths(tree)
+        manifest = {"version": _FORMAT_VERSION, "step": step, "meta": meta,
+                    "leaves": []}
+        payload = []
+        for p, leaf in zip(paths, leaves):
+            arr = np.asarray(leaf)
+            # bfloat16 has no portable numpy dtype string; save raw u2 view
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":
+                raw = arr.view(np.uint16)
+                manifest["leaves"].append(
+                    {"path": p, "dtype": "bfloat16",
+                     "shape": list(arr.shape)})
+                payload.append(raw.tobytes())
+            else:
+                manifest["leaves"].append(
+                    {"path": p, "dtype": dtype, "shape": list(arr.shape)})
+                payload.append(arr.tobytes())
+        blob = msgpack.packb({"manifest": json.dumps(manifest),
+                              "buffers": payload})
+        d = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".ckpt.tmp")
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
 
 
 def load_meta(path: str) -> dict:
@@ -109,34 +113,37 @@ def load_pytree(path: str, like: Any, *, device: bool = True) -> Any:
     import jax.numpy as jnp
     import ml_dtypes
 
-    try:
-        with open(path, "rb") as f:
-            data = msgpack.unpackb(f.read())
-        manifest = json.loads(data["manifest"])
-        by_path = {}
-        for meta, buf in zip(manifest["leaves"], data["buffers"]):
-            if meta["dtype"] == "bfloat16":
-                arr = np.frombuffer(buf, np.uint16).reshape(meta["shape"]).view(
-                    ml_dtypes.bfloat16)
-            else:
-                arr = np.frombuffer(buf, np.dtype(meta["dtype"])).reshape(meta["shape"])
-            by_path[meta["path"]] = arr
-    except _DECODE_ERRORS as e:
-        raise _corrupt(path, "leaf buffers", e) from e
+    with telemetry.span("checkpoint", op="load", path=path):
+        try:
+            with open(path, "rb") as f:
+                data = msgpack.unpackb(f.read())
+            manifest = json.loads(data["manifest"])
+            by_path = {}
+            for meta, buf in zip(manifest["leaves"], data["buffers"]):
+                if meta["dtype"] == "bfloat16":
+                    arr = np.frombuffer(buf, np.uint16).reshape(
+                        meta["shape"]).view(ml_dtypes.bfloat16)
+                else:
+                    arr = np.frombuffer(buf, np.dtype(meta["dtype"])).reshape(
+                        meta["shape"])
+                by_path[meta["path"]] = arr
+        except _DECODE_ERRORS as e:
+            raise _corrupt(path, "leaf buffers", e) from e
 
-    paths, leaves, treedef = _tree_paths(like)
-    out = []
-    for p, leaf in zip(paths, leaves):
-        if p not in by_path:
-            raise KeyError(f"checkpoint missing leaf {p!r}")
-        arr = by_path[p]
-        if tuple(arr.shape) != tuple(leaf.shape):
-            raise ValueError(f"{p}: shape {arr.shape} != expected {leaf.shape}")
-        if device:
-            out.append(jnp.asarray(arr, dtype=leaf.dtype))
-        else:
-            out.append(arr.astype(np.dtype(leaf.dtype), copy=False))
-    return jax.tree_util.tree_unflatten(treedef, out)
+        paths, leaves, treedef = _tree_paths(like)
+        out = []
+        for p, leaf in zip(paths, leaves):
+            if p not in by_path:
+                raise KeyError(f"checkpoint missing leaf {p!r}")
+            arr = by_path[p]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{p}: shape {arr.shape} != expected {leaf.shape}")
+            if device:
+                out.append(jnp.asarray(arr, dtype=leaf.dtype))
+            else:
+                out.append(arr.astype(np.dtype(leaf.dtype), copy=False))
+        return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def restore_train_state(path: str, abstract_state: Any, shardings: Any) -> Any:

@@ -50,6 +50,8 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from repro import telemetry
+
 _SPEC_FILE = "data_store.json"
 
 
@@ -378,19 +380,25 @@ class LookaheadPager:
         load the window's pages so round t+1 assembles from cache while
         round t's step runs. Also warms the next cohort's shift rows on
         the bound store."""
-        keep = set()
-        for r in range(done_round + 1, done_round + 1 + self.lookahead):
-            keep |= self.pages_for_round(r, cohort_sampler)
-        for key in [k for k in self._pages if k not in keep]:
-            del self._pages[key]
-            self.evictions += 1
-        for name, s in sorted(keep):
-            self._page(name, s)
-        if self.state is not None and self.lookahead > 0:
-            touch = getattr(self.state, "touch", None)
-            if touch is not None:
-                nxt = cohort_sampler.cohort_for_round(done_round + 1)
-                self.state_bytes_warmed += touch(nxt)
+        with telemetry.span("page_in", round=done_round + 1):
+            keep = set()
+            for r in range(done_round + 1, done_round + 1 + self.lookahead):
+                keep |= self.pages_for_round(r, cohort_sampler)
+            for key in [k for k in self._pages if k not in keep]:
+                del self._pages[key]
+                self.evictions += 1
+            for name, s in sorted(keep):
+                self._page(name, s)
+            if self.state is not None and self.lookahead > 0:
+                touch = getattr(self.state, "touch", None)
+                if touch is not None:
+                    nxt = cohort_sampler.cohort_for_round(done_round + 1)
+                    self.state_bytes_warmed += touch(nxt)
+        if telemetry.enabled():
+            # cumulative residency/hit-rate snapshot after the window move
+            for name, v in self.stats().items():
+                telemetry.counter(f"pager.{name}", int(v),
+                                  round=done_round + 1)
 
     # -- store I/O routing (drivers call through the pager) ------------------
 

@@ -29,6 +29,7 @@ from typing import Any, Callable, Mapping, NamedTuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.data.reshuffle import ReshuffleSampler
 
 PutFn = Callable[[dict], Any]
@@ -176,9 +177,15 @@ class _PrefetchStream:
 
     # -- iteration ---------------------------------------------------------
 
+    def _build_traced(self, plan):
+        # spans fire from the worker thread on prefetch paths — the sink's
+        # per-thread nesting keeps them on their own trace track
+        with telemetry.span("assemble", stream=type(self).__name__):
+            return self._build(plan)
+
     def _submit(self):
         plan = self._plan()
-        fut = (self._pool.submit(self._build, plan)
+        fut = (self._pool.submit(self._build_traced, plan)
                if self._pool is not None else None)
         return plan, fut
 
@@ -195,7 +202,7 @@ class _PrefetchStream:
         try:
             if self._pool is None:
                 plan, _ = self._submit()
-                return self._emit(plan, self._build(plan))
+                return self._emit(plan, self._build_traced(plan))
             if self._pending is None:
                 self._pending = self._submit()
             (plan, fut), self._pending = self._pending, self._submit()

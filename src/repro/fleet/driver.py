@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.data.pipeline import CohortStream
 from repro.fleet.chaos import (
     AsyncPlanner,
@@ -149,6 +150,15 @@ class FleetRunner:
         self._bits_per_client = 8.0 * (
             wire["intra_pod"] if agg.client_axes else wire["inter_pod"])
         self._wire_dtype = agg.wire_dtype
+        self._cohort_size = m
+        # static accounting facts, once per run: the per-level wire bytes
+        # every per-round uplink counter derives from
+        telemetry.run_meta({
+            "driver": type(self).__name__,
+            "wire_bytes_per_round": {k: int(v) for k, v in wire.items()},
+            "bits_per_client_round": self._bits_per_client,
+            "wire_dtype": self._wire_dtype, "cohort": m,
+            "population": store.population, "local_steps": self._local_steps})
 
     @property
     def store(self) -> ClientStateStore:
@@ -184,9 +194,10 @@ class FleetRunner:
         io = self._pager if self._pager is not None else store
         for _ in range(rounds):
             fr = next(self._stream)
+            with telemetry.span("gather", round=fr.round):
+                gathered = io.gather(fr.cohort)
             state = _steps.with_cohort_shifts(
-                state, io.gather(fr.cohort), self._shardings,
-                self._shift_field)
+                state, gathered, self._shardings, self._shift_field)
             if self._slotted:
                 if not (fr.cols == fr.cols[:1]).all():
                     raise RuntimeError(
@@ -195,14 +206,26 @@ class FleetRunner:
                         "bug: the constructor gates should have rejected "
                         "the config)")
                 slots = jnp.asarray(fr.cols[0], jnp.int32)
-                state, metrics = self._jitted(state, fr.batch, key, slots)
+                with telemetry.span("device_step", round=fr.round):
+                    state, metrics = self._jitted(state, fr.batch, key,
+                                                  slots)
             else:
-                state, metrics = self._jitted(state, fr.batch, key)
+                with telemetry.span("device_step", round=fr.round):
+                    state, metrics = self._jitted(state, fr.batch, key)
             if store.has_shifts:
-                io.scatter(fr.cohort,
-                           jax.device_get(self._device_shifts(state)))
+                with telemetry.span("scatter", round=fr.round):
+                    io.scatter(fr.cohort,
+                               jax.device_get(self._device_shifts(state)))
             store.advance(fr.cohort, self._local_steps)
             store.add_bits(fr.cohort, self._bits_per_client)
+            # one participation schema across sync/async: the sync round is
+            # the degenerate plan where everyone reports on time, weight 1
+            m = self._cohort_size
+            metrics = dict(metrics)
+            metrics.update(completed=m, on_time=m, weight_sum=float(m))
+            telemetry.counter("fleet.uplink_bits",
+                             m * self._bits_per_client, round=fr.round)
+            telemetry.round_metrics(fr.round, metrics)
             if callback is not None:
                 callback(fr.round, state, metrics)
         return state
@@ -295,17 +318,48 @@ class AsyncFleetRunner(FleetRunner):
             try:
                 return op(*args)
             except TransientStoreError:
+                telemetry.counter("fleet.store_retry", 1,
+                                  op=getattr(op, "__name__", str(op)))
                 if attempt >= c.max_retries:
                     raise
                 if c.backoff > 0:
                     time.sleep(c.backoff * 2 ** attempt)
 
+    _STALE_BINS = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, np.inf)
+
+    def _participation(self, plan) -> dict:
+        """Chaos counters + the raw (pre-normalization) participation mass.
+
+        `plan.weights` always sums to m after the `m/sum(w)` rescale, so
+        the schema's `weight_sum` recomputes the RAW mass the server
+        buffered: 1.0 per on-time reporter plus the staleness discount of
+        every late fold-in."""
+        late = plan.reported & ~plan.on_time
+        raw = float(plan.on_time.sum())
+        if self._planner.late == "discount" and late.any():
+            raw += float(np.sum(
+                self._planner.discount
+                / (1.0 + plan.latency[late] - plan.deadline)))
+        if telemetry.enabled():
+            stale = plan.latency[late] - plan.deadline
+            hist, _ = np.histogram(stale, bins=np.asarray(self._STALE_BINS))
+            telemetry.counter("fleet.on_time", int(plan.on_time.sum()))
+            telemetry.counter("fleet.late", int(late.sum()))
+            telemetry.counter("fleet.dropped",
+                              int(plan.on_time.size - plan.reported.sum()))
+            telemetry.counter("fleet.staleness_hist", hist.tolist())
+        return {"on_time": int(plan.on_time.sum()),
+                "weight_sum": raw,
+                "dropped": int(plan.on_time.size - plan.reported.sum()),
+                "deadline": float(plan.deadline)}
+
     def run(self, state, key, rounds: int,
             callback: Callable[[int, Any, dict], None] | None = None):
         """Advance `rounds` buffered-async fleet rounds. The metrics dict
         gains per-round participation stats (`on_time`, `completed`,
-        `dropped`, `deadline`); zero-completer rounds report
-        `{"skipped": True}` and leave the state untouched."""
+        `weight_sum`, `dropped`, `deadline` — the same schema the sync
+        runner emits); zero-completer rounds report `{"skipped": True}`
+        and leave the state untouched."""
         store = self._store
         io = self._pager if self._pager is not None else store
         for _ in range(rounds):
@@ -313,46 +367,52 @@ class AsyncFleetRunner(FleetRunner):
             plan = fr.plan
             comp = plan.completes
             n_comp = int(comp.sum())
+            # from the plan, not the weights: the m/sum(w) rescale pushes
+            # discounted LATE weights past 1.0 whenever any client is
+            # late/dark, so `weight_sum` is the raw buffered mass instead
+            part = self._participation(plan)
+            uplink = int(plan.reported.sum()) * self._bits_per_client
+            telemetry.counter("fleet.uplink_bits", uplink, round=fr.round)
             if n_comp == 0:
                 # the buffer never fills: no server update this round, but
                 # reporters still burned uplink bits
                 if plan.reported.any():
                     self._io_retry(store.add_bits, fr.cohort[plan.reported],
                                    self._bits_per_client)
+                metrics = {"skipped": True, "completed": 0, **part}
+                telemetry.round_metrics(fr.round, metrics)
                 if callback is not None:
-                    callback(fr.round, state, {"skipped": True})
+                    callback(fr.round, state, metrics)
                 continue
+            with telemetry.span("gather", round=fr.round):
+                gathered = self._io_retry(io.gather, fr.cohort)
             state = _steps.with_cohort_shifts(
-                state, self._io_retry(io.gather, fr.cohort),
-                self._shardings, self._shift_field)
+                state, gathered, self._shardings, self._shift_field)
             weights = jnp.asarray(plan.weights)
-            if self._slotted:
-                slots = jnp.asarray(fr.cols[0], jnp.int32)
-                state, metrics = self._jitted(state, fr.batch, key, slots,
-                                              weights)
-            else:
-                state, metrics = self._jitted(state, fr.batch, key, weights)
+            with telemetry.span("device_step", round=fr.round):
+                if self._slotted:
+                    slots = jnp.asarray(fr.cols[0], jnp.int32)
+                    state, metrics = self._jitted(state, fr.batch, key,
+                                                  slots, weights)
+                else:
+                    state, metrics = self._jitted(state, fr.batch, key,
+                                                  weights)
             if store.has_shifts:
                 # only completers persist their round: non-completing rows
                 # of the device table are discarded (the next gather
                 # overwrites them), leaving their store rows pre-round
-                upd = jax.device_get(self._device_shifts(state))
-                idx = np.flatnonzero(comp)
-                self._io_retry(
-                    io.scatter, fr.cohort[idx],
-                    jax.tree.map(lambda l: l[idx], upd))
+                with telemetry.span("scatter", round=fr.round):
+                    upd = jax.device_get(self._device_shifts(state))
+                    idx = np.flatnonzero(comp)
+                    self._io_retry(
+                        io.scatter, fr.cohort[idx],
+                        jax.tree.map(lambda l: l[idx], upd))
             self._io_retry(store.advance, fr.cohort[comp], self._local_steps)
             self._io_retry(store.add_bits, fr.cohort[plan.reported],
                            self._bits_per_client)
+            metrics = dict(metrics)
+            metrics.update(completed=n_comp, **part)
+            telemetry.round_metrics(fr.round, metrics)
             if callback is not None:
-                metrics = dict(metrics)
-                metrics.update(
-                    # from the plan, not the weights: the m/sum(w) rescale
-                    # pushes discounted LATE weights past 1.0 whenever any
-                    # client is late/dark
-                    on_time=int(plan.on_time.sum()),
-                    completed=n_comp,
-                    dropped=int(fr.cohort.size - plan.reported.sum()),
-                    deadline=float(plan.deadline))
                 callback(fr.round, state, metrics)
         return state

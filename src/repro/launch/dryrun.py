@@ -23,6 +23,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.launch import compat
 
 from repro.configs import (
@@ -373,7 +374,25 @@ def main(argv=None):
                          "cost terms, which count loop bodies once)")
     ap.add_argument("--out", default=None, help="append JSONL here")
     ap.add_argument("--tag", default=None, help="label stored with results")
+    ap.add_argument("--telemetry", default=None, metavar="JSONL",
+                    help="stream dry-run telemetry (compile spans; with "
+                         "--data-store the fleet smoke's assemble/page_in "
+                         "spans and pager counters) to this JSONL file")
+    ap.add_argument("--trace", default=None, metavar="JSON",
+                    help="also export a Chrome/Perfetto trace at exit")
     args = ap.parse_args(argv)
+
+    tpath = args.telemetry
+    if args.trace and not tpath:
+        base = (args.trace[:-5] if args.trace.endswith(".json")
+                else args.trace)
+        tpath = base + ".telemetry.jsonl"
+    if tpath is not None:
+        telemetry.install(telemetry.MetricsSink(tpath))
+        telemetry.run_meta({"tool": "dryrun", "agg": args.agg,
+                            "wire_dtype": args.wire_dtype,
+                            "clients": args.clients,
+                            "data_store": bool(args.data_store)})
 
     pairs = (
         [(a, s) for a in ARCH_NAMES for s in INPUT_SHAPES]
@@ -382,31 +401,48 @@ def main(argv=None):
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
 
     failures = 0
-    for arch, shape in pairs:
-        for multi in meshes:
-            try:
-                res = lower_pair(
-                    arch, shape, multi_pod=multi, agg_method=args.agg,
-                    agg_wire=args.wire, wire_dtype=args.wire_dtype,
-                    fraction=args.fraction,
-                    remat=args.remat, ce=args.ce, seq_shard=args.seq_shard,
-                    probes=not args.no_probes, local_steps=args.local_steps,
-                    clients=args.clients, buffer_k=args.buffer_k,
-                    chaos_dropout=args.chaos_dropout,
-                    data_store=args.data_store,
-                    extra_tags={"tag": args.tag} if args.tag else None,
-                )
-            except Exception as e:  # a dry-run failure is a sharding bug
-                failures += 1
-                res = {"arch": arch, "shape": shape,
-                       "mesh": "multi" if multi else "single",
-                       "status": "error", "error": f"{type(e).__name__}: {e}",
-                       "traceback": traceback.format_exc()[-2000:]}
-            line = json.dumps(res)
-            print(line, flush=True)
-            if args.out:
-                with open(args.out, "a") as f:
-                    f.write(line + "\n")
+    try:
+        for arch, shape in pairs:
+            for multi in meshes:
+                try:
+                    with telemetry.span("compile", arch=arch, shape=shape):
+                        res = lower_pair(
+                            arch, shape, multi_pod=multi,
+                            agg_method=args.agg,
+                            agg_wire=args.wire, wire_dtype=args.wire_dtype,
+                            fraction=args.fraction,
+                            remat=args.remat, ce=args.ce,
+                            seq_shard=args.seq_shard,
+                            probes=not args.no_probes,
+                            local_steps=args.local_steps,
+                            clients=args.clients, buffer_k=args.buffer_k,
+                            chaos_dropout=args.chaos_dropout,
+                            data_store=args.data_store,
+                            extra_tags={"tag": args.tag} if args.tag
+                            else None,
+                        )
+                except Exception as e:  # a dry-run failure is a sharding bug
+                    failures += 1
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                line = json.dumps(res)
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+    finally:
+        sink = telemetry.active()
+        if sink is not None:
+            telemetry.uninstall()
+            sink.close()
+            if args.trace:
+                n = telemetry.write_trace(
+                    telemetry.read_events(tpath), args.trace)
+                print(f"trace -> {args.trace} ({n} trace events)",
+                      file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -242,7 +242,8 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
                     lr: float = 3e-3, eta: float | None = None,
                     local_steps: int = 1, remat="full", unroll: bool = False,
                     ce: str = "gather", seq_shard: bool = True,
-                    optimizer: str = "sgd", elastic: bool = False):
+                    optimizer: str = "sgd", elastic: bool = False,
+                    debug_metrics: bool = False):
     """Returns jitted (state, batch, key) -> (state, metrics).
 
     lr: the client/local stepsize gamma. With `local_steps == 1` it is also
@@ -274,6 +275,14 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
     async fleet driver (repro.fleet, DESIGN.md §3.10) uses weight 0 to mask
     dropped/padded clients and fractional weights to discount stale
     reports; the cohort can shrink/grow between rounds without recompiling.
+
+    debug_metrics: opt-in device-side compression diagnostics carried in
+    the metrics pytree — `compression_err_sq` (‖ḡ − D‖², the distance
+    between the uncompressed mean gradient and the wire's aggregated
+    direction), `direction_norm_sq`, and the shift-table norms. Everything
+    is pure jnp riding reductions GSPMD already does, no extra
+    collectives; default OFF so the traced step's jaxpr is unchanged
+    (pinned by the analysis census).
     """
     if eta is not None and local_steps == 1:
         raise ValueError("eta is the NASTYA server stepsize and requires "
@@ -443,6 +452,29 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
 
     # -- the step ---------------------------------------------------------------
 
+    def _sq_norm(tree):
+        """Σ‖leaf‖² in f32 — pure jnp, trace-safe."""
+        return sum((jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x in jax.tree.leaves(tree)), jnp.float32(0.0))
+
+    def _debug_extras(g_stacked, direction, new_shifts, new_ms):
+        """Opt-in compression diagnostics: ‖ḡ − D‖² plus wire-state norms.
+
+        ḡ is the uncompressed mean over the stacked leading axis (clients,
+        or pods in NASTYA mode) — a reduction GSPMD lowers exactly like the
+        wire's own mean, so no new collective patterns appear."""
+        g_mean = jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), g_stacked)
+        err = sum(
+            (jnp.sum(jnp.square(gm - d.astype(jnp.float32)))
+             for gm, d in zip(jax.tree.leaves(g_mean),
+                              jax.tree.leaves(direction))),
+            jnp.float32(0.0))
+        return {"compression_err_sq": err,
+                "direction_norm_sq": _sq_norm(direction),
+                "shift_norm_sq": _sq_norm(new_shifts),
+                "mean_shift_norm_sq": _sq_norm(new_ms)}
+
     def nastya_epoch(state: TrainState, batch, rkey, slots):
         """local_steps local RR mini-epochs per pod + one inter-pod round."""
         bsz = jax.tree.leaves(batch)[0].shape[0] // (m * local_steps)
@@ -510,8 +542,10 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(x.astype(jnp.float32)))
             for x in jax.tree.leaves(g_pod)) / n_pods_)
+        extras = (_debug_extras(g_pod, direction, new_shifts, new_ms)
+                  if debug_metrics else {})
         return (direction, new_shifts, new_ms, new_psh, new_pms,
-                jnp.mean(losses), gnorm)
+                jnp.mean(losses), gnorm, extras)
 
     def flat_round(state: TrainState, batch, rkey, slots, weights):
         """One communication round (Algorithms 2-3 / the composed wire)."""
@@ -526,8 +560,10 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(x.astype(jnp.float32)))
             for x in jax.tree.leaves(g)) / m)
+        extras = (_debug_extras(g, direction, new_shifts, new_ms)
+                  if debug_metrics else {})
         return (direction, new_shifts, new_ms, new_psh, new_pms,
-                jnp.mean(losses), gnorm)
+                jnp.mean(losses), gnorm, extras)
 
     def check_batch(batch):
         """The batch contract (fed by data.pipeline.make_batch_stream):
@@ -568,16 +604,16 @@ def make_train_step(cfg: ArchConfig, mesh, *, agg: CompressedAggregation,
         rkey = jax.random.fold_in(key, state.step)
         if local_steps > 1:
             (direction, new_shifts, new_ms, new_psh, new_pms, loss,
-             gnorm) = nastya_epoch(state, batch, rkey, slots)
+             gnorm, extras) = nastya_epoch(state, batch, rkey, slots)
         else:
             (direction, new_shifts, new_ms, new_psh, new_pms, loss,
-             gnorm) = flat_round(state, batch, rkey, slots,
-                                 weights if elastic else None)
+             gnorm, extras) = flat_round(state, batch, rkey, slots,
+                                         weights if elastic else None)
         updates, new_opt = opt.update(
             jax.tree.map(lambda d: d.astype(jnp.float32), direction),
             state.opt_state, state.params)
         new_params = optim.apply_updates(state.params, updates)
-        metrics = {"loss": loss, "grad_norm": gnorm}
+        metrics = {"loss": loss, "grad_norm": gnorm, **extras}
         return TrainState(new_params, new_shifts, new_ms, state.step + 1,
                           new_opt, new_psh, new_pms), metrics
 

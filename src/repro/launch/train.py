@@ -27,13 +27,14 @@ if "--production-mesh" not in os.sys.argv:
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
-import time
 
 import jax
 
 from repro.launch import compat
 import jax.numpy as jnp
 import numpy as np
+
+from repro import telemetry
 
 from repro.checkpoint import load_meta, restore_train_state, save_pytree
 from repro.checkpoint.io import (
@@ -182,7 +183,6 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
         start_round = fm["round"]
 
     key = salts.root_key(0, salts.ROUNDS_KEY_SALT)
-    t0 = time.time()
     with compat.set_mesh(mesh):
         if args.resume:
             state = restore_fleet_checkpoint(
@@ -214,20 +214,18 @@ def run_fleet(args, cfg, mesh, agg, m, n_batches, b,
                 local_steps=args.local_steps, prefetch=args.prefetch,
                 start_round=start_round, paged=pager)
 
+        # monotonic rate over the stepping window only: start() fires after
+        # restore + runner/stream construction, and the checkpoint write
+        # below lands after the last report — neither folds into s/round
+        reporter = telemetry.ConsoleReporter(
+            unit="round", log_every=args.log_every, total=args.steps,
+            start=start_round)
+
         def log(t, _state, metrics):
-            if t % args.log_every == 0 or t == args.steps - 1:
-                if metrics.get("skipped"):
-                    print(f"round {t:5d} | skipped (buffer never filled)",
-                          flush=True)
-                    return
-                part = (f" | done {metrics['completed']}/{m}"
-                        if "completed" in metrics else "")
-                print(f"round {t:5d} | loss {float(metrics['loss']):8.4f} | "
-                      f"gnorm {float(metrics['grad_norm']):9.3f} | "
-                      f"{(time.time()-t0)/(t-start_round+1):6.2f}s/round"
-                      + part, flush=True)
+            reporter.report(t, metrics, cohort=m)
 
         with runner:
+            reporter.start()
             state = runner.run(state, key, args.steps - start_round,
                                callback=log)
             if args.checkpoint:
@@ -337,7 +335,32 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
                     help="disable the double-buffered host prefetch")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--telemetry", default=None, metavar="JSONL",
+                    help="stream structured run events (round metrics, host "
+                         "phase spans, wire/chaos/pager counters) to this "
+                         "JSONL file; inspect with `python -m "
+                         "repro.telemetry` (DESIGN.md §3.14). Off by "
+                         "default and byte-identical when off")
+    ap.add_argument("--trace", default=None, metavar="JSON",
+                    help="also export a Chrome/Perfetto trace_event JSON at "
+                         "exit (implies --telemetry to a sibling file when "
+                         "not set)")
+    ap.add_argument("--device-metrics", action="store_true",
+                    help="carry opt-in compression diagnostics in the "
+                         "step's metrics pytree (‖ḡ−D‖², shift norms) — "
+                         "changes the compiled step, so off by default")
     return ap
+
+
+def telemetry_path(args) -> str | None:
+    """--telemetry wins; --trace alone derives a sibling JSONL path."""
+    if args.telemetry:
+        return args.telemetry
+    if args.trace:
+        base = (args.trace[:-5] if args.trace.endswith(".json")
+                else args.trace)
+        return base + ".telemetry.jsonl"
+    return None
 
 
 def main():
@@ -395,7 +418,8 @@ def main():
     jitted, abstract, shardings, batch_sh = steps.make_train_step(
         cfg, mesh, agg=agg, lr=args.lr, eta=args.eta,
         local_steps=args.local_steps, remat=remat,
-        optimizer=args.optimizer, elastic=fleet_is_async(args))
+        optimizer=args.optimizer, elastic=fleet_is_async(args),
+        debug_metrics=args.device_metrics)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract.params))
     print(f"arch={cfg.name} ({n_params/1e6:.1f}M params) clients={m} "
           f"agg={args.agg}/{args.wire}"
@@ -405,6 +429,35 @@ def main():
           + (f" fleet=C{args.clients}/{args.cohort_mode}"
              if args.clients is not None else ""))
 
+    tpath = telemetry_path(args)
+    if tpath is not None:
+        telemetry.install(telemetry.MetricsSink(tpath))
+        flags = {k: v for k, v in sorted(vars(args).items())
+                 if isinstance(v, (str, int, float, bool, type(None)))}
+        agg_c = steps.configure_agg(agg, mesh, args.local_steps)
+        wire = agg_c.wire_bytes_per_round(abstract.params)
+        telemetry.run_meta({
+            "argv": flags, "arch": cfg.name, "n_params": n_params,
+            "mesh_clients": m,
+            "wire_bytes_per_round": {k: int(v) for k, v in wire.items()}})
+    try:
+        return _run(args, cfg, mesh, agg, m, n_batches,
+                    jitted, abstract, shardings, batch_sh)
+    finally:
+        sink = telemetry.active()
+        if sink is not None:
+            telemetry.uninstall()
+            sink.close()
+            print(f"telemetry -> {tpath}")
+            if args.trace:
+                n = telemetry.write_trace(
+                    telemetry.read_events(tpath), args.trace)
+                print(f"trace -> {args.trace} ({n} trace events)")
+
+
+def _run(args, cfg, mesh, agg, m, n_batches,
+         jitted, abstract, shardings, batch_sh):
+    slotted = args.agg == "diana_rr"
     b = max(1, args.batch // m)
     if args.clients is not None:
         return run_fleet(args, cfg, mesh, agg, m, n_batches, b,
@@ -441,7 +494,15 @@ def main():
                     optimizer=args.optimizer, mesh=mesh,
                     local_steps=args.local_steps), shardings)
         key = salts.root_key(0, salts.ROUNDS_KEY_SALT)
-        t0 = time.time()
+
+        if telemetry.enabled():
+            agg_c = steps.configure_agg(agg, mesh, args.local_steps)
+            wire = agg_c.wire_bytes_per_round(abstract.params)
+            bits_per_client = 8.0 * (wire["intra_pod"] if agg_c.client_axes
+                                     else wire["inter_pod"])
+        reporter = telemetry.ConsoleReporter(
+            unit="step", log_every=args.log_every, total=args.steps,
+            start=start_step)
 
         # the NASTYA-aware stream owns RR order, client-major assembly,
         # modality alignment, and prefetch+device_put overlap
@@ -451,20 +512,25 @@ def main():
             put=lambda batch: jax.device_put(batch, batch_sh(batch)),
             prefetch=args.prefetch, start_step=start_step)
         with stream:
+            # start the rate clock AFTER restore + stream construction so
+            # neither checkpoint-restore nor first-build time folds in
+            reporter.start()
             for t, batch in zip(range(start_step, args.steps), stream):
                 if slotted:
                     # the shared slot stream is a pure function of the
                     # stateless sampler, so --resume re-derives it exactly
                     slots = jnp.asarray(shared_slots_for_step(
                         sampler, t, args.local_steps, n_slots=agg.n_slots))
-                    state, metrics = jitted(state, batch, key, slots)
+                    with telemetry.span("device_step", round=t):
+                        state, metrics = jitted(state, batch, key, slots)
                 else:
-                    state, metrics = jitted(state, batch, key)
-                if t % args.log_every == 0 or t == args.steps - 1:
-                    print(f"step {t:5d} | loss {float(metrics['loss']):8.4f} | "
-                          f"gnorm {float(metrics['grad_norm']):9.3f} | "
-                          f"{(time.time()-t0)/(t-start_step+1):6.2f}s/step",
-                          flush=True)
+                    with telemetry.span("device_step", round=t):
+                        state, metrics = jitted(state, batch, key)
+                if telemetry.enabled():
+                    telemetry.counter("wire.uplink_bits",
+                                      m * bits_per_client, round=t)
+                    telemetry.round_metrics(t, metrics)
+                reporter.report(t, metrics)
             if args.checkpoint:
                 save_pytree(args.checkpoint, jax.device_get(state),
                             step=int(state.step),

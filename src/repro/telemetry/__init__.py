@@ -1,0 +1,45 @@
+"""Structured metrics, round-phase tracing, and a zero-cost-when-off event
+pipeline for train/fleet/wire (DESIGN.md §3.14).
+
+    from repro import telemetry
+
+    with telemetry.session(telemetry.MetricsSink("run.telemetry.jsonl")):
+        ...   # drivers/streams/pager/checkpoint emit spans + counters
+
+    python -m repro.telemetry run.telemetry.jsonl --validate --to-trace t.json
+
+Instrumented code calls the module-level `span`/`counter`/`round_metrics`
+helpers; with no sink installed they cost one global load and a None
+check. Import stays numpy-only — the streams and checkpoint layers pull
+this in, and nothing here may drag jax along.
+"""
+from repro.telemetry.events import (
+    EVENT_KINDS,
+    SCHEMA_VERSION,
+    TelemetryError,
+    read_events,
+    validate_events,
+)
+from repro.telemetry.sink import (
+    ConsoleReporter,
+    MetricsSink,
+    active,
+    counter,
+    enabled,
+    install,
+    round_metrics,
+    run_meta,
+    session,
+    span,
+    uninstall,
+)
+from repro.telemetry.trace import to_trace_events, write_trace
+
+__all__ = [
+    "EVENT_KINDS", "SCHEMA_VERSION", "TelemetryError",
+    "read_events", "validate_events",
+    "ConsoleReporter", "MetricsSink",
+    "active", "counter", "enabled", "install", "round_metrics", "run_meta",
+    "session", "span", "uninstall",
+    "to_trace_events", "write_trace",
+]

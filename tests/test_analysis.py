@@ -530,6 +530,19 @@ def test_census_elastic_weights_are_live(census_cfg):
     assert graph.check_elastic(census_cfg, mesh, "flat") == []
 
 
+def test_census_telemetry_identity(census_cfg, mesh_4x2):
+    """The zero-cost-when-off claim in compiled form: tracing the step
+    with an active in-memory sink yields a byte-identical jaxpr (telemetry
+    lives strictly host-side of the jit boundary), and the check itself
+    never leaks an installed sink."""
+    from repro import telemetry
+    from repro.analysis import graph
+
+    assert graph.check_telemetry_identity(census_cfg, mesh_4x2, "flat",
+                                          method="diana_rr") == []
+    assert telemetry.active() is None
+
+
 def test_census_detects_a_broken_wire_model(census_cfg):
     """Sanity that the census would actually fire: feed check_step a wire
     whose analytic accounting we deliberately corrupt."""
